@@ -1,0 +1,30 @@
+"""Fig. 6/7: system page size (4KB vs 64KB): alloc/dealloc and compute time."""
+from repro.apps import APP_RUNNERS
+
+from benchmarks.common import emit
+
+KB = 1024
+SIZES = {
+    "needle": dict(n=1024),
+    "pathfinder": dict(rows=2048, cols=512),
+    "bfs": dict(n_nodes=1 << 14),
+    "hotspot": dict(rows=1024, cols=1024, iters=8),
+    "srad": dict(rows=512, cols=512, iters=12),
+}
+
+
+def run():
+    for app, kw in SIZES.items():
+        res = {}
+        for ps in (4 * KB, 64 * KB):
+            r = APP_RUNNERS[app]("system", page_size=ps, **kw)
+            res[ps] = r
+            ad = r.phase_times.get("alloc", 0) + r.phase_times.get("dealloc", 0)
+            emit(f"fig6/{app}/page{ps//KB}K", ad * 1e6,
+                 f"compute_us={r.phase_times.get('compute',0)*1e6:.1f}")
+        ad4 = res[4 * KB].phase_times["alloc"] + res[4 * KB].phase_times["dealloc"]
+        ad64 = res[64 * KB].phase_times["alloc"] + res[64 * KB].phase_times["dealloc"]
+        c4 = res[4 * KB].phase_times["compute"]
+        c64 = res[64 * KB].phase_times["compute"]
+        emit(f"fig67/{app}/ratios", 0.0,
+             f"allocdealloc_4k_over_64k={ad4/ad64:.1f};compute_4k_over_64k={c4/c64:.2f}")

@@ -1,0 +1,24 @@
+"""Ours: per-(arch x shape x mesh) roofline terms from the dry-run records."""
+import os
+
+from repro.launch.roofline import load
+
+from benchmarks.common import emit
+
+DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+TAG = os.environ.get("DRYRUN_TAG", "baseline")
+
+
+def run():
+    if not os.path.isdir(os.path.join(DIR, TAG)):
+        emit("lm_roofline/missing", 0.0, f"run launch.dryrun first ({DIR}/{TAG})")
+        return
+    for r in load(DIR, TAG):
+        if "skipped" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                 "skipped=" + r["skipped"].replace(",", ";"))
+            continue
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", bound * 1e6,
+             f"dominant={r['dominant']};roofline_frac={r['roofline_fraction']:.2f};"
+             f"mfu_bound={r['mfu_bound']:.3f};fits={r['fits']}")

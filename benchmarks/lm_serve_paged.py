@@ -1,0 +1,30 @@
+"""Ours: paged-KV serving with the umem-governed pool (tokens/s + traffic)."""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import TPU_V5E, UnifiedMemory
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+from benchmarks.common import emit
+
+
+def run():
+    cfg = get_config("yi-6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    um = UnifiedMemory(hw=TPU_V5E)
+    eng = ServeEngine(cfg, params, max_seqs=4, max_len=128, page_size=16, um=um)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.add_request(rng.integers(2, cfg.vocab_size, 24), 12)
+    t0 = time.perf_counter()
+    out = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    tr = um.report()["traffic_total"]
+    emit("lm_serve/paged_umem", dt / max(1, toks) * 1e6,
+         f"tokens={toks};kv_h2d_MB={tr['link_h2d']/2**20:.2f};"
+         f"pte_gpu={tr['pte_inits_gpu']}")

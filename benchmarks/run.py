@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure. CSV to stdout."""
+import importlib
+import traceback
+
+from benchmarks.common import header
+
+MODULES = [
+    "benchmarks.fig3_overview",
+    "benchmarks.fig45_timeline",
+    "benchmarks.fig67_pagesize",
+    "benchmarks.fig89_qiskit",
+    "benchmarks.fig10_srad_migration",
+    "benchmarks.fig11_oversub",
+    "benchmarks.fig1213_prefetch",
+    "benchmarks.kernels_micro",
+    "benchmarks.lm_serve_paged",
+    "benchmarks.lm_roofline",
+]
+
+
+def main() -> None:
+    header()
+    failed = []
+    for m in MODULES:
+        try:
+            importlib.import_module(m).run()
+        except Exception:
+            failed.append(m)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

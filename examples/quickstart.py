@@ -1,0 +1,55 @@
+"""Quickstart: one forward, one train step, one decode — any assigned arch.
+
+    PYTHONPATH=src python examples/quickstart.py [arch]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import RunPolicy, decode_step, forward, init_params, prefill
+from repro.models.cache import init_cache
+from repro.train import TrainerConfig, make_train_state, make_train_step
+
+
+def main(arch: str = "yi-6b"):
+    print(f"archs available: {list_archs()}")
+    cfg = get_config(arch).reduced()  # same family, CPU-sized
+    print(f"\n== {arch} (reduced: {cfg.num_layers}L d={cfg.d_model}) ==")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    pol = RunPolicy()
+
+    B, S = 2, 32
+    if cfg.input_kind == "embeddings":
+        tokens = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    else:
+        tokens = jax.random.randint(key, (B, S), 2, cfg.vocab_size)
+    logits, _ = jax.jit(lambda p, t: forward(cfg, p, t, pol))(params, tokens)
+    print("forward:", logits.shape, "->", float(logits.mean()))
+
+    # one train step
+    state = make_train_state(cfg, params)
+    tc = TrainerConfig(grad_accum=2, total_steps=10, warmup_steps=2)
+    step = jax.jit(make_train_step(cfg, pol, tc))
+    labels = jax.random.randint(key, (B, S), 2, cfg.vocab_size)
+    state, metrics = step(state, {"tokens": tokens, "labels": labels})
+    print(f"train step: loss={float(metrics['loss']):.4f} "
+          f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+    # prefill + decode three tokens
+    lg, _ = jax.jit(lambda p, t: prefill(cfg, p, t, pol))(params, tokens)
+    cache = init_cache(cfg, B, S + 8, tp=1, dtype=jnp.float32)
+    dec = jax.jit(lambda p, t, ps, c: decode_step(cfg, p, t, ps, c, pol))
+    tok = tokens[:, :1] if cfg.input_kind != "embeddings" else tokens[:, :1, :]
+    for i in range(3):
+        lg, cache = dec(params, tok, jnp.full((B,), i, jnp.int32), cache)
+        nxt = jnp.argmax(lg[:, 0], -1)
+        print(f"decode step {i}: next={nxt.tolist()}")
+        if cfg.input_kind != "embeddings":
+            tok = nxt[:, None]
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "yi-6b")

@@ -1,0 +1,48 @@
+"""Dev smoke: forward + loss + prefill/decode on every reduced arch (CPU)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import RunPolicy, decode_step, forward, init_params, loss_fn, prefill
+from repro.models.cache import init_cache
+
+B, S = 2, 32
+
+
+def run(name):
+    cfg = get_config(name).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    policy = RunPolicy()
+    if cfg.input_kind == "embeddings":
+        tokens = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    else:
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, aux = jax.jit(lambda p, t: forward(cfg, p, t, policy))(params, tokens)
+    assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+    assert not np.any(np.isnan(np.asarray(logits, np.float32))), "NaN logits"
+    loss, m = jax.jit(lambda p, b: loss_fn(cfg, p, b, policy))(
+        params, {"tokens": tokens, "labels": labels})
+    assert np.isfinite(float(loss))
+    # prefill + one decode step
+    lg, cache = jax.jit(lambda p, t: prefill(cfg, p, t, policy))(params, tokens)
+    cache2 = init_cache(cfg, B, S + 8, tp=1, dtype=jnp.float32)
+    lg2, cache2 = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c, policy))(
+        params,
+        tokens[:, :1] if cfg.input_kind != "embeddings" else tokens[:, :1, :],
+        jnp.zeros((B,), jnp.int32),
+        cache2,
+    )
+    assert lg2.shape == (B, 1, cfg.vocab_size)
+    print(f"  {name}: OK loss={float(loss):.3f}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list_archs()
+    for n in names:
+        run(n)
+    print("ALL OK")

@@ -1,0 +1,17 @@
+"""The paper's six applications (Table 2), each in explicit/managed/system versions."""
+from repro.apps.bfs import run_bfs  # noqa: F401
+from repro.apps.common import AppResult  # noqa: F401
+from repro.apps.hotspot import run_hotspot  # noqa: F401
+from repro.apps.needle import run_needle  # noqa: F401
+from repro.apps.pathfinder import run_pathfinder  # noqa: F401
+from repro.apps.qsim import run_qsim  # noqa: F401
+from repro.apps.srad import run_srad  # noqa: F401
+
+APP_RUNNERS = {
+    "qiskit": run_qsim,
+    "needle": run_needle,
+    "pathfinder": run_pathfinder,
+    "bfs": run_bfs,
+    "hotspot": run_hotspot,
+    "srad": run_srad,
+}

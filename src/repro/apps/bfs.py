@@ -1,0 +1,95 @@
+"""BFS: level-synchronous breadth-first search on a CSR graph (Rodinia).
+
+Mixed access pattern, CPU-init (graph construction). Frontier expansion
+touches scattered col_idx ranges — modeled as per-level partial-range reads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
+from repro.core import Actor
+
+
+def _random_graph(n_nodes: int, deg: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, n_nodes, size=n_nodes * deg, dtype=np.int32)
+    row_ptr = np.arange(0, n_nodes * deg + 1, deg, dtype=np.int32)
+    return jnp.asarray(row_ptr), jnp.asarray(cols)
+
+
+def _bfs_levels(row_ptr, cols, n_nodes: int, deg: int, src: int = 0, max_levels: int = 32):
+    """Returns (levels array, per-level frontier sizes)."""
+    level = jnp.full((n_nodes,), -1, jnp.int32).at[src].set(0)
+    frontier = jnp.zeros((n_nodes,), bool).at[src].set(True)
+    sizes = []
+    neigh = cols.reshape(n_nodes, deg)
+    for lv in range(1, max_levels):
+        # neighbors of frontier nodes
+        mask = frontier[:, None]
+        touched = jnp.zeros((n_nodes,), bool).at[
+            jnp.where(mask, neigh, 0).reshape(-1)].max(mask.repeat(deg, 1).reshape(-1))
+        new = touched & (level < 0)
+        if not bool(new.any()):
+            break
+        level = jnp.where(new, lv, level)
+        sizes.append(int(new.sum()))
+        frontier = new
+    return level, sizes
+
+
+def run_bfs(policy_kind: str = "system", *, n_nodes: int = 1 << 16, deg: int = 8,
+            page_size: int = 64 * KB, oversub_ratio: float = 0.0,
+            auto_migrate: bool = True, interpret: bool = True) -> AppResult:
+    edge_bytes = n_nodes * deg * 4
+    node_bytes = n_nodes * 4
+    um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
+                      app_peak_bytes=edge_bytes + 3 * node_bytes,
+                      auto_migrate=auto_migrate)
+
+    with um.phase("alloc"):
+        if policy_kind == "explicit":
+            edges_d, edges_h = explicit_pair(um, "col_idx", edge_bytes)
+            rowp_d, rowp_h = explicit_pair(um, "row_ptr", node_bytes)
+        else:
+            edges_d = um.alloc("col_idx", edge_bytes, pol)
+            rowp_d = um.alloc("row_ptr", node_bytes, pol)
+        cost_d = um.alloc("cost", node_bytes, pol)
+
+    with um.phase("cpu_init"):
+        row_ptr, cols = _random_graph(n_nodes, deg)
+        tg = [edges_h, rowp_h] if policy_kind == "explicit" else [edges_d, rowp_d]
+        um.kernel(writes=[(t, 0, t.nbytes) for t in tg], actor=Actor.CPU, name="build")
+
+    if policy_kind == "explicit":
+        with um.phase("h2d"):
+            um.copy(edges_d, 0, edge_bytes, "h2d")
+            um.copy(rowp_d, 0, node_bytes, "h2d")
+
+    with um.phase("compute"):
+        level, sizes = _bfs_levels(row_ptr, cols, n_nodes, deg)
+        total = max(1, n_nodes)
+        for lv, fsize in enumerate(sizes):
+            # frontier covers fsize/n of nodes; edges touched ~ fsize*deg
+            frac = min(1.0, fsize * 4.0 / total)  # scattered pages touched
+            hi = max(4096, int(frac * edge_bytes) // 4096 * 4096)
+            um.kernel(
+                reads=[(edges_d, 0, min(hi, edge_bytes)), (rowp_d, 0, node_bytes)],
+                writes=[(cost_d, 0, node_bytes)],
+                flops=2.0 * fsize * deg, actor=Actor.GPU, name=f"level{lv}")
+            um.sync()
+
+    if policy_kind == "explicit":
+        with um.phase("d2h"):
+            um.copy(cost_d, 0, node_bytes, "d2h")
+
+    with um.phase("dealloc"):
+        for a in list(um.allocs.values()):
+            if not a.freed and a.name != "__ballast__":
+                um.free(a)
+
+    visited = int((level >= 0).sum())
+    return finish(um, "bfs", policy_kind, page_size, float(visited),
+                  n_nodes=n_nodes, levels=len(sizes))

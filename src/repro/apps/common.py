@@ -1,0 +1,96 @@
+"""Shared app harness: policy factories, phases, ballast oversubscription.
+
+Every app follows the paper's Fig. 2 structure:
+    alloc -> init (CPU- or GPU-side first touch) -> compute -> dealloc
+in one of three memory-management versions: 'explicit' (original
+cudaMalloc+memcpy), 'managed' (cudaMallocManaged), 'system' (malloc).
+
+The math is real JAX executed on CPU; the *memory system* (placement,
+faults, counters, migrations, traffic, modeled time) is the UnifiedMemory
+runtime. Oversubscription uses the paper's own methodology (§3.2): a ballast
+explicit allocation shrinks free device memory to hit a target ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core import (
+    GRACE_HOPPER,
+    Actor,
+    HardwareModel,
+    UnifiedMemory,
+    explicit_policy,
+    managed_policy,
+    system_policy,
+)
+
+KB = 1024
+MB = 1024 * 1024
+
+
+@dataclass
+class AppResult:
+    name: str
+    policy: str
+    page_size: int
+    phase_times: Dict[str, float]
+    checksum: float
+    report: Dict[str, object]
+    extra: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def total(self) -> float:
+        return sum(self.phase_times.values())
+
+    def time_excluding_cpu_init(self) -> float:
+        """The paper excludes single-threaded CPU init when reporting (§3.1)."""
+        return sum(v for k, v in self.phase_times.items() if k != "cpu_init")
+
+
+def make_um(policy_kind: str, *, page_size: int = 64 * KB,
+            hw: HardwareModel = GRACE_HOPPER, auto_migrate: bool = True,
+            oversub_ratio: float = 0.0, app_peak_bytes: int = 0,
+            speculative_prefetch: int = 4, threshold: int = 256):
+    """Build a UnifiedMemory + the policy for app buffers (+ballast if oversub).
+
+    oversub_ratio R > 1 shrinks free device memory so that
+    app_peak_bytes / free == R (the paper's simulated oversubscription).
+    """
+    um = UnifiedMemory(hw=hw)
+    if oversub_ratio and oversub_ratio > 1.0:
+        assert app_peak_bytes > 0
+        target_free = int(app_peak_bytes / oversub_ratio)
+        ballast = hw.device_capacity - target_free
+        if ballast > 0:
+            um.alloc("__ballast__", ballast, explicit_policy())
+    if policy_kind == "system":
+        pol = system_policy(page_size, auto_migrate=auto_migrate, threshold=threshold)
+    elif policy_kind == "managed":
+        pol = managed_policy(page_size, speculative_prefetch=speculative_prefetch)
+    elif policy_kind == "explicit":
+        pol = explicit_policy()
+    else:
+        raise ValueError(policy_kind)
+    return um, pol
+
+
+def explicit_pair(um: UnifiedMemory, name: str, nbytes: int):
+    """Explicit version: a host staging buffer + a device buffer."""
+    dev = um.alloc(name, nbytes, explicit_policy())
+    host = um.alloc(name + "__host", nbytes, system_policy(auto_migrate=False))
+    return dev, host
+
+
+def finish(um: UnifiedMemory, name: str, policy_kind: str, page_size: int,
+           checksum: float, **extra) -> AppResult:
+    rep = um.report()
+    return AppResult(
+        name=name,
+        policy=policy_kind,
+        page_size=page_size,
+        phase_times=dict(um.prof.phase_times),
+        checksum=float(checksum),
+        report=rep,
+        extra=extra,
+    )

@@ -1,0 +1,72 @@
+"""Hotspot: thermal-simulation stencil (Rodinia). Regular access, CPU-init.
+
+Paper roles: Fig. 3 (system > managed in-memory), Fig. 4 timeline shape,
+Fig. 6/7 page-size sensitivity, Fig. 11 oversubscription robustness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
+from repro.core import Actor
+from repro.kernels.stencil5 import stencil5
+
+COEFF = 0.1
+
+
+def run_hotspot(policy_kind: str = "system", *, rows: int = 1024, cols: int = 1024,
+                iters: int = 8, page_size: int = 64 * KB,
+                oversub_ratio: float = 0.0, auto_migrate: bool = True,
+                interpret: bool = True) -> AppResult:
+    nbytes = rows * cols * 4
+    um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
+                      app_peak_bytes=3 * nbytes, auto_migrate=auto_migrate)
+
+    with um.phase("alloc"):
+        if policy_kind == "explicit":
+            temp_d, temp_h = explicit_pair(um, "temp", nbytes)
+            power_d, power_h = explicit_pair(um, "power", nbytes)
+            out_d = um.alloc("temp_out", nbytes, pol)  # GPU-only scratch
+        else:
+            temp_d = um.alloc("temp", nbytes, pol)
+            power_d = um.alloc("power", nbytes, pol)
+            out_d = um.alloc("temp_out", nbytes, pol)
+
+    key = jax.random.PRNGKey(0)
+    with um.phase("cpu_init"):
+        temp = 300.0 + 50.0 * jax.random.uniform(key, (rows, cols), jnp.float32)
+        power = jax.random.uniform(jax.random.PRNGKey(1), (rows, cols), jnp.float32)
+        if policy_kind == "explicit":
+            um.kernel(writes=[(temp_h, 0, nbytes), (power_h, 0, nbytes)],
+                      actor=Actor.CPU, name="init")
+        else:
+            um.kernel(writes=[(temp_d, 0, nbytes), (power_d, 0, nbytes)],
+                      actor=Actor.CPU, name="init")
+
+    if policy_kind == "explicit":
+        with um.phase("h2d"):
+            um.copy(temp_d, 0, nbytes, "h2d")
+            um.copy(power_d, 0, nbytes, "h2d")
+
+    with um.phase("compute"):
+        src, dst = temp_d, out_d
+        for it in range(iters):
+            temp = stencil5(temp, COEFF, interpret=interpret) + 0.001 * power
+            um.kernel(reads=[(src, 0, nbytes), (power_d, 0, nbytes)],
+                      writes=[(dst, 0, nbytes)],
+                      flops=7.0 * rows * cols, actor=Actor.GPU, name=f"sweep{it}")
+            um.sync()
+            src, dst = dst, src
+
+    if policy_kind == "explicit":
+        with um.phase("d2h"):
+            um.copy(temp_d, 0, nbytes, "d2h")
+
+    with um.phase("dealloc"):
+        for a in list(um.allocs.values()):
+            if not a.freed and a.name != "__ballast__":
+                um.free(a)
+
+    return finish(um, "hotspot", policy_kind, page_size, float(jnp.mean(temp)),
+                  iters=iters, rows=rows, cols=cols)

@@ -1,0 +1,89 @@
+"""Needleman-Wunsch sequence alignment (Rodinia). Irregular, CPU-init.
+
+Anti-diagonal wavefront DP; the row-associative form lets JAX compute each
+row with a cummax instead of a serial column loop (see _nw_rows)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
+from repro.core import Actor
+
+
+def _nw_rows(sim, penalty: int):
+    """F[i,j] = max(F[i-1,j-1]+sim, F[i-1,j]-p, F[i,j-1]-p).
+
+    Per-row: A[j] = max(F[i-1,j-1]+sim[i,j], F[i-1,j]-p);
+    F[i,j] = cummax_j(A[j] + p*j) - p*j   (max-plus prefix identity).
+    """
+    n = sim.shape[1]
+    jdx = jnp.arange(n, dtype=jnp.int32) * penalty
+
+    def step(prev, srow):
+        shifted = jnp.concatenate([jnp.array([-penalty], prev.dtype), prev[:-1]])
+        A = jnp.maximum(shifted + srow, prev - penalty)
+        F = jax.lax.cummax(A + jdx) - jdx
+        return F, None
+
+    init = -penalty * jnp.arange(n, dtype=jnp.int32)
+    last, _ = jax.lax.scan(step, init, sim)
+    return last
+
+
+def run_needle(policy_kind: str = "system", *, n: int = 2048, penalty: int = 1,
+               page_size: int = 64 * KB, waves_per_kernel: int = 64,
+               oversub_ratio: float = 0.0, auto_migrate: bool = True,
+               interpret: bool = True) -> AppResult:
+    nbytes = n * n * 4
+    um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
+                      app_peak_bytes=2 * nbytes, auto_migrate=auto_migrate)
+
+    with um.phase("alloc"):
+        if policy_kind == "explicit":
+            ref_d, ref_h = explicit_pair(um, "reference", nbytes)
+            mat_d, mat_h = explicit_pair(um, "matrix", nbytes)
+        else:
+            ref_d = um.alloc("reference", nbytes, pol)
+            mat_d = um.alloc("matrix", nbytes, pol)
+
+    key = jax.random.PRNGKey(11)
+    with um.phase("cpu_init"):
+        sim = jax.random.randint(key, (n, n), -2, 3, jnp.int32)
+        tgts = [ref_h, mat_h] if policy_kind == "explicit" else [ref_d, mat_d]
+        um.kernel(writes=[(t, 0, nbytes) for t in tgts], actor=Actor.CPU, name="init")
+
+    if policy_kind == "explicit":
+        with um.phase("h2d"):
+            um.copy(ref_d, 0, nbytes, "h2d")
+            um.copy(mat_d, 0, nbytes, "h2d")
+
+    with um.phase("compute"):
+        last_row = _nw_rows(sim, penalty)
+        # wavefront sweeps touch growing/shrinking diagonal bands: model as
+        # strided sub-range kernels (irregular pattern)
+        waves = 2 * n - 1
+        rows_per_wave = max(1, n // 64)
+        for w0 in range(0, waves, waves_per_kernel):
+            w1 = min(w0 + waves_per_kernel, waves)
+            frac0, frac1 = w0 / waves, w1 / waves
+            lo = int(frac0 * nbytes) // 4096 * 4096
+            hi = max(lo + 4096, int(frac1 * nbytes) // 4096 * 4096)
+            hi = min(hi, nbytes)
+            um.kernel(
+                reads=[(ref_d, lo, hi), (mat_d, lo, hi)],
+                writes=[(mat_d, lo, hi)],
+                flops=10.0 * (hi - lo) / 4, actor=Actor.GPU, name=f"wave{w0}")
+            um.sync()
+
+    if policy_kind == "explicit":
+        with um.phase("d2h"):
+            um.copy(mat_d, 0, nbytes, "d2h")
+
+    with um.phase("dealloc"):
+        for a in list(um.allocs.values()):
+            if not a.freed and a.name != "__ballast__":
+                um.free(a)
+
+    return finish(um, "needle", policy_kind, page_size,
+                  float(last_row[-1]), n=n)

@@ -1,0 +1,79 @@
+"""Quantum Volume statevector simulation (Qiskit-Aer style). Mixed, GPU-init.
+
+The paper's flagship app: statevector of 8 * 2^n bytes; each QV layer applies
+floor(n/2) random SU(4) gates to disjoint qubit pairs (kernels/qv_gate). The
+in-memory cases reproduce Fig. 5/8/9 (page-size x policy); n beyond device
+capacity is the natural-oversubscription case of Fig. 12/13, where explicit
+chunk prefetching rescues managed memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.common import KB, MB, AppResult, finish, make_um
+from repro.core import Actor
+from repro.kernels.qv_gate import apply_two_qubit_gate
+
+
+def _random_su4(rng: np.random.Generator) -> jnp.ndarray:
+    z = rng.normal(size=(4, 4)) + 1j * rng.normal(size=(4, 4))
+    q, r = np.linalg.qr(z)
+    q = q * (np.diagonal(r) / np.abs(np.diagonal(r)))
+    return jnp.asarray(q, jnp.complex64)
+
+
+def run_qsim(policy_kind: str = "system", *, n_qubits: int = 16,
+             depth: Optional[int] = None, page_size: int = 64 * KB,
+             oversub_ratio: float = 0.0, use_prefetch: bool = False,
+             auto_migrate: bool = True, seed: int = 0,
+             interpret: bool = True) -> AppResult:
+    depth = depth if depth is not None else max(2, n_qubits // 4)
+    nbytes = 8 * (1 << n_qubits)
+    um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
+                      app_peak_bytes=nbytes, auto_migrate=auto_migrate)
+
+    with um.phase("alloc"):
+        sv = um.alloc("statevector", nbytes, pol)
+
+    # GPU-side init: the simulator zeroes the statevector on device (|0...0>)
+    with um.phase("gpu_init"):
+        state = jnp.zeros((1 << n_qubits,), jnp.complex64).at[0].set(1.0)
+        um.kernel(writes=[(sv, 0, nbytes)], actor=Actor.GPU, name="zero_state")
+        um.sync()
+
+    rng = np.random.default_rng(seed)
+    with um.phase("compute"):
+        for layer in range(depth):
+            perm = rng.permutation(n_qubits)
+            for g in range(n_qubits // 2):
+                q1, q2 = int(perm[2 * g]), int(perm[2 * g + 1])
+                gate = _random_su4(rng)
+                state = apply_two_qubit_gate(state, gate, q1, q2, n_qubits,
+                                             interpret=interpret)
+                if use_prefetch:
+                    # cudaMemPrefetchAsync chunking (Fig. 12): stream chunks
+                    # device-side ahead of each partial gate sweep, so reads
+                    # come from HBM instead of thrash-mode remote access
+                    chunk = min(nbytes, 64 * MB)
+                    for lo in range(0, nbytes, chunk):
+                        hi = min(lo + chunk, nbytes)
+                        um.prefetch(sv, lo, hi, overlap=True)
+                        um.kernel(reads=[(sv, lo, hi)], writes=[(sv, lo, hi)],
+                                  flops=32.0 * (hi - lo) / 16, actor=Actor.GPU,
+                                  name=f"gate_l{layer}_{q1}_{q2}_c{lo}")
+                else:
+                    um.kernel(reads=[(sv, 0, nbytes)], writes=[(sv, 0, nbytes)],
+                              flops=32.0 * (1 << n_qubits), actor=Actor.GPU,
+                              name=f"gate_l{layer}_{q1}_{q2}")
+            um.sync()
+
+    with um.phase("dealloc"):
+        um.free(sv)
+
+    norm = float(jnp.abs(jnp.vdot(state, state)))
+    return finish(um, "qsim", policy_kind, page_size, norm,
+                  n_qubits=n_qubits, depth=depth, prefetch=use_prefetch)

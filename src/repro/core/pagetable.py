@@ -1,0 +1,81 @@
+"""BlockTable: the software analogue of the Grace Hopper system page table.
+
+One table per allocation. Pages start *unmapped* (PTEs exist only logically,
+like malloc's lazy mapping); the first toucher maps each page to its tier
+(first-touch policy) and pays the PTE-init cost. Access counters drive the
+delayed migration strategy (threshold notifications, §2.2.1 of the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Tuple
+
+import numpy as np
+
+
+class Tier(IntEnum):
+    UNMAPPED = -1
+    HOST = 0
+    DEVICE = 1
+
+
+class Actor(IntEnum):
+    CPU = 0
+    GPU = 1  # "device": the GPU on GH, the TPU core in the adapted model
+
+    @property
+    def home_tier(self) -> Tier:
+        return Tier.DEVICE if self is Actor.GPU else Tier.HOST
+
+
+@dataclass
+class BlockTable:
+    name: str
+    nbytes: int
+    page_size: int
+
+    def __post_init__(self):
+        self.num_pages = max(1, -(-self.nbytes // self.page_size))
+        self.tier = np.full(self.num_pages, int(Tier.UNMAPPED), np.int8)
+        self.gpu_counter = np.zeros(self.num_pages, np.int32)
+        self.cpu_counter = np.zeros(self.num_pages, np.int32)
+        self.last_access_epoch = np.zeros(self.num_pages, np.int64)
+        self.dirty = np.zeros(self.num_pages, bool)
+
+    # -- ranges -------------------------------------------------------------
+    def page_range(self, lo: int, hi: int) -> Tuple[int, int]:
+        """[lo, hi) byte range -> [first_page, last_page) page range."""
+        assert 0 <= lo <= hi <= self.nbytes, (lo, hi, self.nbytes)
+        if lo == hi:
+            return (0, 0)
+        return lo // self.page_size, -(-hi // self.page_size)
+
+    def page_bytes(self, idx: np.ndarray) -> np.ndarray:
+        """Actual bytes covered by each page index (last page may be partial)."""
+        full = np.full(len(idx), self.page_size, np.int64)
+        tail = self.nbytes - (self.num_pages - 1) * self.page_size
+        full[idx == self.num_pages - 1] = tail
+        return full
+
+    # -- views --------------------------------------------------------------
+    def resident_bytes(self, tier: Tier) -> int:
+        idx = np.nonzero(self.tier == int(tier))[0]
+        return int(self.page_bytes(idx).sum()) if len(idx) else 0
+
+    def mapped_fraction(self) -> float:
+        return float((self.tier != int(Tier.UNMAPPED)).mean())
+
+    def pages_in(self, tier: Tier) -> np.ndarray:
+        return np.nonzero(self.tier == int(tier))[0]
+
+    # -- mutations (called by UnifiedMemory) ---------------------------------
+    def map_pages(self, pages: np.ndarray, tier: Tier) -> None:
+        assert (self.tier[pages] == int(Tier.UNMAPPED)).all(), "double map"
+        self.tier[pages] = int(tier)
+
+    def move_pages(self, pages: np.ndarray, tier: Tier) -> None:
+        assert (self.tier[pages] != int(Tier.UNMAPPED)).all(), "move of unmapped page"
+        self.tier[pages] = int(tier)
+        self.gpu_counter[pages] = 0
+        self.cpu_counter[pages] = 0

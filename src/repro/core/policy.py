@@ -1,0 +1,59 @@
+"""Memory-management policies: the paper's three allocation strategies.
+
+system   -> system-allocated memory (malloc): single system page table,
+            direct remote access at fine granularity, access-counter-based
+            *delayed* migration (threshold notifications, §2.2.1).
+managed  -> CUDA managed memory (cudaMallocManaged): fault-driven on-demand
+            migration at 2 MB granularity + speculative prefetch, LRU
+            eviction under device-capacity pressure (§2.3).
+explicit -> cudaMalloc + cudaMemcpy: device-resident, explicit copies, OOM on
+            oversubscription.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+KB = 1024
+MB = 1024 * 1024
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    kind: str  # system | managed | explicit
+    page_size: int  # system page size (PTE granularity)
+    migration_granule: int  # bytes moved per migration decision
+    counter_threshold: int = 256  # remote accesses before a notification
+    auto_migrate: bool = True  # system: enable counter-based migration
+    speculative_prefetch: int = 4  # managed: granules prefetched per fault
+    max_migration_bytes_per_sync: int = 512 * MB  # driver batch per sync point
+
+    def __post_init__(self):
+        assert self.kind in ("system", "managed", "explicit"), self.kind
+
+
+def system_policy(page_size: int = 64 * KB, *, threshold: int = 256,
+                  auto_migrate: bool = True,
+                  max_migration_bytes_per_sync: int = 512 * MB) -> PolicyConfig:
+    return PolicyConfig(
+        kind="system",
+        page_size=page_size,
+        migration_granule=max(page_size, 64 * KB),
+        counter_threshold=threshold,
+        auto_migrate=auto_migrate,
+        max_migration_bytes_per_sync=max_migration_bytes_per_sync,
+    )
+
+
+def managed_policy(page_size: int = 64 * KB, *, speculative_prefetch: int = 4) -> PolicyConfig:
+    # device-side pages are 2 MB (GPU-exclusive page table); host-side PTEs
+    # use the system page size (alloc/dealloc/eviction costs)
+    return PolicyConfig(
+        kind="managed",
+        page_size=page_size,
+        migration_granule=2 * MB,
+        speculative_prefetch=speculative_prefetch,
+    )
+
+
+def explicit_policy() -> PolicyConfig:
+    return PolicyConfig(kind="explicit", page_size=2 * MB, migration_granule=2 * MB)

@@ -1,0 +1,71 @@
+"""Memory utilization profiler (paper §3.2).
+
+Samples per-tier resident bytes over *modeled* time whenever the runtime
+state changes — the RSS / nvidia-smi analogue — and aggregates per-phase
+durations and traffic counters (the Fig. 4/5 timelines and Fig. 10/12
+traffic plots are drawn from this)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class TrafficCounters:
+    link_h2d: int = 0  # bytes over the interconnect, host->device
+    link_d2h: int = 0
+    device_local: int = 0  # bytes served from device memory
+    host_local: int = 0  # bytes served from host memory (CPU-side access)
+    faults: int = 0
+    notifications: int = 0
+    migrated_in: int = 0  # bytes migrated host->device
+    migrated_out: int = 0
+    pte_inits_cpu: int = 0
+    pte_inits_gpu: int = 0
+
+    def merge(self, other: "TrafficCounters") -> None:
+        for k, v in vars(other).items():
+            setattr(self, k, getattr(self, k) + v)
+
+
+@dataclass
+class MemoryProfiler:
+    driver_baseline: int = 600 * 1024 * 1024  # nvidia-smi baseline (§3.2)
+    timeline: List[Tuple[float, int, int]] = field(default_factory=list)
+    phase_times: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    phase_traffic: Dict[str, TrafficCounters] = field(
+        default_factory=lambda: defaultdict(TrafficCounters))
+    _phase: str = "default"
+
+    def set_phase(self, name: str) -> None:
+        self._phase = name
+
+    @property
+    def phase(self) -> str:
+        return self._phase
+
+    def sample(self, t: float, host_bytes: int, device_bytes: int) -> None:
+        self.timeline.append((t, host_bytes, device_bytes + self.driver_baseline))
+
+    def charge(self, seconds: float) -> None:
+        self.phase_times[self._phase] += seconds
+
+    def traffic(self) -> TrafficCounters:
+        return self.phase_traffic[self._phase]
+
+    def total_time(self) -> float:
+        return sum(self.phase_times.values())
+
+    def report(self) -> Dict[str, object]:
+        total = TrafficCounters()
+        for t in self.phase_traffic.values():
+            total.merge(t)
+        return {
+            "phase_times_s": dict(self.phase_times),
+            "total_time_s": self.total_time(),
+            "traffic": {k: vars(v) for k, v in self.phase_traffic.items()},
+            "traffic_total": vars(total),
+            "peak_device_bytes": max((d for _, _, d in self.timeline), default=0),
+            "peak_host_bytes": max((h for _, h, _ in self.timeline), default=0),
+        }

@@ -1,0 +1,411 @@
+"""UnifiedMemory: the Grace Hopper unified-memory system as a composable runtime.
+
+Models (and on real TPU backends, drives — see serve/paged.py and
+optim/offload) a two-tier HBM/host memory system with:
+
+  * lazy PTE creation + first-touch placement (system & managed),
+  * direct remote access at fine granularity over the interconnect (system),
+  * fault-driven on-demand migration + speculative prefetch (managed),
+  * access-counter-based delayed migration with threshold notifications
+    (system, §2.2.1), applied batch-wise at sync points,
+  * LRU eviction under device-capacity pressure (managed) vs graceful remote
+    access (system), reproducing the paper's oversubscription behavior (§7).
+
+Applications interact through alloc/free, phase(), kernel(), copy() and
+prefetch(). Time is *modeled* via the HardwareModel (this container has no
+GPU/TPU); correctness of the application math is real JAX executed on CPU.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import GRACE_HOPPER, HardwareModel
+from repro.core.pagetable import Actor, BlockTable, Tier
+from repro.core.policy import PolicyConfig, explicit_policy, managed_policy, system_policy
+from repro.core.profiler import MemoryProfiler
+
+Range = Tuple["Allocation", int, int]  # (alloc, lo, hi) byte range
+
+
+@dataclass
+class Allocation:
+    name: str
+    nbytes: int
+    policy: PolicyConfig
+    table: Optional[BlockTable]  # None for explicit (device-resident, no PTEs)
+    device_bytes_explicit: int = 0
+    pending: Optional[np.ndarray] = None  # system: notification-pending pages
+    freed: bool = False
+
+
+class OutOfDeviceMemory(RuntimeError):
+    pass
+
+
+class UnifiedMemory:
+    def __init__(self, hw: HardwareModel = GRACE_HOPPER,
+                 profiler: Optional[MemoryProfiler] = None):
+        self.hw = hw
+        self.prof = profiler or MemoryProfiler()
+        self.clock = 0.0
+        self.allocs: Dict[str, Allocation] = {}
+        self.epoch = 0
+        self._pending_overlap = 0.0  # async-prefetch seconds hidden under compute
+
+    # ------------------------------------------------------------------ util
+    def _charge(self, seconds: float) -> None:
+        self.clock += seconds
+        self.prof.charge(seconds)
+
+    def _sample(self) -> None:
+        self.prof.sample(self.clock, self.host_bytes(), self.device_bytes())
+
+    def host_bytes(self) -> int:
+        return sum(a.table.resident_bytes(Tier.HOST) for a in self.allocs.values()
+                   if a.table is not None and not a.freed)
+
+    def device_bytes(self) -> int:
+        tot = 0
+        for a in self.allocs.values():
+            if a.freed:
+                continue
+            tot += a.device_bytes_explicit
+            if a.table is not None:
+                tot += a.table.resident_bytes(Tier.DEVICE)
+        return tot
+
+    def device_free(self) -> int:
+        return self.hw.device_capacity - self.device_bytes()
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        prev = self.prof.phase
+        self.prof.set_phase(name)
+        try:
+            yield
+        finally:
+            self.prof.set_phase(prev)
+
+    # ----------------------------------------------------------------- alloc
+    def alloc(self, name: str, nbytes: int, policy: PolicyConfig) -> Allocation:
+        assert name not in self.allocs, f"duplicate alloc {name!r}"
+        if policy.kind == "explicit":
+            if nbytes > self.device_free():
+                raise OutOfDeviceMemory(
+                    f"cudaMalloc({name}): {nbytes} > free {self.device_free()}")
+            a = Allocation(name, nbytes, policy, table=None, device_bytes_explicit=nbytes)
+            self._charge(self.hw.alloc_per_page * -(-nbytes // policy.page_size))
+        else:
+            table = BlockTable(name, nbytes, policy.page_size)
+            a = Allocation(name, nbytes, policy, table=table,
+                           pending=np.zeros(table.num_pages, bool))
+            # lazy PTEs: allocation itself only creates VMA bookkeeping
+            self._charge(self.hw.alloc_per_page * min(table.num_pages, 64))
+        self.allocs[name] = a
+        self._sample()
+        return a
+
+    def free(self, a: Allocation) -> None:
+        assert not a.freed
+        if a.table is not None:
+            mapped = int((a.table.tier != int(Tier.UNMAPPED)).sum())
+            self._charge(self.hw.dealloc_per_page * mapped)
+        else:
+            self._charge(self.hw.dealloc_per_page *
+                         -(-a.nbytes // a.policy.migration_granule))
+        a.freed = True
+        self._sample()
+
+    # ------------------------------------------------------- page-level ops
+    def _first_touch(self, a: Allocation, pages: np.ndarray, actor: Actor) -> None:
+        t = a.table
+        unmapped = pages[t.tier[pages] == int(Tier.UNMAPPED)]
+        if len(unmapped) == 0:
+            return
+        tr = self.prof.traffic()
+        if actor is Actor.GPU and a.policy.kind == "system":
+            # GPU first-touch of system memory: SMMU fault -> OS on the CPU
+            # creates the PTE (the §5.1.2 init bottleneck)
+            self._charge(self.hw.pte_init_gpu * len(unmapped))
+            tr.pte_inits_gpu += len(unmapped)
+        elif actor is Actor.GPU:
+            # managed: first-touch maps straight into the GPU page table
+            granules = max(1, len(unmapped) * t.page_size // a.policy.migration_granule)
+            self._charge(self.hw.pte_init_cpu * granules)
+            tr.pte_inits_gpu += len(unmapped)
+        else:
+            self._charge(self.hw.pte_init_cpu * len(unmapped))
+            tr.pte_inits_cpu += len(unmapped)
+        tier = actor.home_tier
+        if tier is Tier.DEVICE:
+            need = int(t.page_bytes(unmapped).sum())
+            if need > self.device_free():
+                if a.policy.kind == "managed":
+                    self._evict_lru(need - self.device_free(), exclude=a)
+                    if need > self.device_free():
+                        tier = Tier.HOST  # spill the remainder
+                else:
+                    tier = Tier.HOST  # system memory: map host-side instead
+        t.map_pages(unmapped, tier)
+
+    def _evict_lru(self, need_bytes: int, exclude: Optional[Allocation] = None) -> None:
+        """Evict LRU managed device-resident granules until need_bytes freed."""
+        victims: List[Tuple[float, Allocation, int]] = []
+        for a in self.allocs.values():
+            if a.freed or a.table is None or a.policy.kind != "managed":
+                continue
+            pages = a.table.pages_in(Tier.DEVICE)
+            for p in pages:
+                victims.append((a.table.last_access_epoch[p], a, p))
+        victims.sort(key=lambda v: v[0])
+        freed = 0
+        tr = self.prof.traffic()
+        by_alloc: Dict[str, List[int]] = {}
+        for _, a, p in victims:
+            if freed >= need_bytes:
+                break
+            by_alloc.setdefault(a.name, []).append(p)
+            freed += int(a.table.page_bytes(np.array([p]))[0])
+        for name, plist in by_alloc.items():
+            a = self.allocs[name]
+            pages = np.asarray(plist)
+            # clean pages are just unmapped; only dirty pages copy back
+            dirty = pages[a.table.dirty[pages]]
+            nbytes = int(a.table.page_bytes(dirty).sum()) if len(dirty) else 0
+            a.table.move_pages(pages, Tier.HOST)
+            a.table.dirty[pages] = False
+            self._charge(nbytes / self.hw.link_d2h + self.hw.migrate_per_page * len(pages))
+            tr.migrated_out += nbytes
+            tr.link_d2h += nbytes
+
+    def _migrate_in(self, a: Allocation, pages: np.ndarray) -> int:
+        """Move host-resident pages to device, evicting if managed. Returns bytes."""
+        t = a.table
+        pages = pages[t.tier[pages] == int(Tier.HOST)]
+        if len(pages) == 0:
+            return 0
+        need = int(t.page_bytes(pages).sum())
+        if need > self.device_free():
+            if a.policy.kind == "managed":
+                self._evict_lru(need - self.device_free(), exclude=a)
+            if need > self.device_free():
+                fit = np.cumsum(t.page_bytes(pages)) <= self.device_free()
+                pages = pages[fit]
+                need = int(t.page_bytes(pages).sum()) if len(pages) else 0
+                if need == 0:
+                    return 0
+        t.move_pages(pages, Tier.DEVICE)
+        tr = self.prof.traffic()
+        tr.migrated_in += need
+        tr.link_h2d += need
+        self._charge(need / self.hw.link_h2d + self.hw.migrate_per_page * len(pages))
+        return need
+
+    # ---------------------------------------------------------------- kernel
+    def kernel(self, *, reads: Sequence[Range] = (), writes: Sequence[Range] = (),
+               flops: float = 0.0, actor: Actor = Actor.GPU,
+               name: str = "kernel") -> float:
+        """Model one kernel/loop-step. Returns modeled seconds."""
+        self.epoch += 1
+        t0 = self.clock
+        tr = self.prof.traffic()
+        local_bytes = 0.0
+        remote_h2d = 0.0
+        remote_d2h = 0.0
+        remote_slow = 0.0  # managed thrash-mode remote reads (low bandwidth)
+
+        for is_write, ranges in ((False, reads), (True, writes)):
+            for a, lo, hi in ranges:
+                assert not a.freed, a.name
+                if a.table is None:  # explicit: device-local always
+                    local_bytes += hi - lo
+                    tr.device_local += hi - lo
+                    continue
+                t = a.table
+                p0, p1 = t.page_range(lo, hi)
+                pages = np.arange(p0, p1)
+                if len(pages) == 0:
+                    continue
+                self._first_touch(a, pages, actor)
+                t.last_access_epoch[pages] = self.epoch
+                if is_write:
+                    t.dirty[pages] = True
+
+                thrashing = False
+                if a.policy.kind == "managed" and actor is Actor.GPU:
+                    # fault-driven on-demand migration (+ speculative prefetch);
+                    # when the touched working set cannot fit even after
+                    # evicting every other managed page, the driver stops
+                    # migrating and serves remote reads (paper §7 Fig. 12)
+                    host_pages = pages[t.tier[pages] == int(Tier.HOST)]
+                    if len(host_pages):
+                        ws = int(t.page_bytes(host_pages).sum())
+                        evictable = sum(
+                            o.table.resident_bytes(Tier.DEVICE)
+                            for o in self.allocs.values()
+                            if o is not a and not o.freed and o.table is not None
+                            and o.policy.kind == "managed")
+                        thrashing = ws > self.device_free() + evictable
+                    if len(host_pages) and not thrashing:
+                        gran_pages = max(1, a.policy.migration_granule // t.page_size)
+                        granules = np.unique(host_pages // gran_pages)
+                        nfaults = len(granules)
+                        tr.faults += nfaults
+                        self._charge(self.hw.page_fault_cost * nfaults)
+                        pf = a.policy.speculative_prefetch
+                        mig = set()
+                        for g in granules:
+                            for gg in range(g, min(g + pf, t.num_pages // gran_pages + 1)):
+                                mig.update(range(gg * gran_pages,
+                                                 min((gg + 1) * gran_pages, t.num_pages)))
+                        self._migrate_in(a, np.asarray(sorted(mig)))
+                elif a.policy.kind == "managed" and actor is Actor.CPU:
+                    dev_pages = pages[t.tier[pages] == int(Tier.DEVICE)]
+                    if len(dev_pages):
+                        gran_pages = max(1, a.policy.migration_granule // t.page_size)
+                        granules = np.unique(dev_pages // gran_pages)
+                        tr.faults += len(granules)
+                        self._charge(self.hw.page_fault_cost * len(granules))
+                        nbytes = int(t.page_bytes(dev_pages).sum())
+                        t.move_pages(dev_pages, Tier.HOST)
+                        tr.migrated_out += nbytes
+                        tr.link_d2h += nbytes
+                        self._charge(nbytes / self.hw.link_d2h
+                                     + self.hw.migrate_per_page * len(dev_pages))
+
+                # account access traffic against current residency
+                pb = t.page_bytes(pages).astype(np.float64)
+                # clip to the actual [lo,hi) range on the boundary pages
+                pb[0] -= lo - p0 * t.page_size
+                if p1 * t.page_size > hi:
+                    pb[-1] -= p1 * t.page_size - hi
+                on_dev = t.tier[pages] == int(Tier.DEVICE)
+                dev_b = float(pb[on_dev].sum())
+                host_b = float(pb[~on_dev].sum())
+                if actor is Actor.GPU:
+                    local_bytes += dev_b
+                    tr.device_local += int(dev_b)
+                    if thrashing:
+                        remote_slow += host_b
+                        tr.link_h2d += int(host_b)
+                    elif is_write:
+                        remote_d2h += host_b
+                        tr.link_d2h += int(host_b)
+                    else:
+                        remote_h2d += host_b
+                        tr.link_h2d += int(host_b)
+                    if a.policy.kind == "system" and a.policy.auto_migrate and host_b:
+                        hp = pages[~on_dev]
+                        txn = np.maximum(1, (t.page_bytes(hp) //
+                                             self.hw.remote_access_grain))
+                        before = t.gpu_counter[hp]
+                        t.gpu_counter[hp] = before + txn.astype(np.int32)
+                        crossed = (before < a.policy.counter_threshold) & (
+                            t.gpu_counter[hp] >= a.policy.counter_threshold)
+                        newly = hp[crossed]
+                        if len(newly):
+                            a.pending[newly] = True
+                            tr.notifications += len(newly)
+                else:
+                    local_bytes += host_b
+                    tr.host_local += int(host_b)
+                    remote_d2h += dev_b
+                    tr.link_d2h += int(dev_b)
+
+        bw = self.hw.device_bw if actor is Actor.GPU else self.hw.host_bw
+        t_local = local_bytes / bw
+        eff = self.hw.remote_efficiency
+        t_remote = (remote_h2d / (self.hw.link_h2d * eff)
+                    + remote_d2h / (self.hw.link_d2h * eff)
+                    + remote_slow / (self.hw.link_h2d
+                                     * self.hw.managed_thrash_efficiency))
+        t_compute = flops / self.hw.flops_rate
+        # async prefetch issued before this kernel overlaps with it
+        t_kernel = max(t_local, t_remote, t_compute, self._pending_overlap)
+        self._pending_overlap = 0.0
+        self._charge(t_kernel + self.hw.kernel_launch)
+        self._sample()
+        return self.clock - t0
+
+    # ------------------------------------------------------------- sync/misc
+    def sync(self) -> float:
+        """cudaDeviceSynchronize analogue: apply pending delayed migrations."""
+        t0 = self.clock
+        if self._pending_overlap:  # flush un-overlapped async prefetches
+            self._charge(self._pending_overlap)
+            self._pending_overlap = 0.0
+        for a in self.allocs.values():
+            if a.freed or a.table is None or a.policy.kind != "system":
+                continue
+            if not a.policy.auto_migrate or a.pending is None:
+                continue
+            pages = np.nonzero(a.pending & (a.table.tier == int(Tier.HOST)))[0]
+            if len(pages) == 0:
+                a.pending[:] = False
+                continue
+            budget = a.policy.max_migration_bytes_per_sync
+            sizes = a.table.page_bytes(pages)
+            keep = np.cumsum(sizes) <= budget
+            moved = self._migrate_in(a, pages[keep])
+            a.pending[pages[keep]] = False
+        self._sample()
+        return self.clock - t0
+
+    def copy(self, a: Allocation, lo: int, hi: int, direction: str) -> float:
+        """Explicit cudaMemcpy. direction: 'h2d' | 'd2h'."""
+        nbytes = hi - lo
+        bw = self.hw.link_h2d if direction == "h2d" else self.hw.link_d2h
+        self._charge(nbytes / bw)
+        tr = self.prof.traffic()
+        if direction == "h2d":
+            tr.link_h2d += nbytes
+        else:
+            tr.link_d2h += nbytes
+        self._sample()
+        return nbytes / bw
+
+    def prefetch(self, a: Allocation, lo: int, hi: int,
+                 overlap: bool = False) -> float:
+        """cudaMemPrefetchAsync analogue: migrate range to device.
+
+        overlap=True models the async stream: the migration cost hides under
+        the next kernel (charged as max(kernel, prefetch))."""
+        t0 = self.clock
+        assert a.table is not None, "prefetch needs a paged allocation"
+        p0, p1 = a.table.page_range(lo, hi)
+        pages = np.arange(p0, p1)
+        self._first_touch(a, pages, Actor.CPU)
+        if overlap:
+            saved = self.clock
+            self._migrate_in(a, pages)
+            self._pending_overlap += self.clock - saved
+            # roll the clock back: the cost is deferred to the next kernel
+            dt = self.clock - saved
+            self.clock = saved
+            self.prof.charge(-dt)
+        else:
+            self._migrate_in(a, pages)
+        self._sample()
+        return self.clock - t0
+
+    # ---------------------------------------------------------------- report
+    def report(self) -> Dict[str, object]:
+        rep = self.prof.report()
+        rep["allocations"] = {
+            name: {
+                "nbytes": a.nbytes,
+                "policy": a.policy.kind,
+                "page_size": a.policy.page_size,
+                "device_bytes": (a.device_bytes_explicit if a.table is None
+                                 else a.table.resident_bytes(Tier.DEVICE)),
+                "host_bytes": (0 if a.table is None
+                               else a.table.resident_bytes(Tier.HOST)),
+                "freed": a.freed,
+            }
+            for name, a in self.allocs.items()
+        }
+        return rep

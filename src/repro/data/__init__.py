@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataLoader, SyntheticLM  # noqa: F401

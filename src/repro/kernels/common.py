@@ -1,0 +1,27 @@
+"""Shared Pallas helpers: interpret-mode detection, compiler params."""
+from __future__ import annotations
+
+import jax
+
+NEG_INF = -1e30
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run compiled on TPU, interpret elsewhere (CPU CI)."""
+    return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(dimension_semantics):
+    """Best-effort TPU compiler params across jax versions (None if absent)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover
+        return None
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=dimension_semantics)
+            except TypeError:  # pragma: no cover
+                continue
+    return None

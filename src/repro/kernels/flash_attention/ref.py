@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.kernels.common import NEG_INF
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D); H % Hkv == 0 (block GQA mapping).
+
+    Returns (B,Sq,H,D). All math in f32.
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    p = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, p, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqnpd,bknd->bnpqk", qf, kf) / jnp.sqrt(float(D))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnpqk,bknd->bqnpd", probs, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

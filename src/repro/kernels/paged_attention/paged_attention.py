@@ -1,0 +1,106 @@
+"""Pallas TPU paged decode attention.
+
+The KV cache lives in a page pool (P, PS, Hkv, D); each sequence owns a row
+of the page table — the serving-side materialization of the paper's system
+page table. The page table and sequence lengths ride in scalar-prefetch
+(SMEM): the k/v BlockSpec index_maps dereference the table so each grid step
+DMAs exactly one page of one kv head from HBM into VMEM. Pages past a
+sequence's length are skipped (no DMA-compute on dead pages).
+
+Grid: (B, Hkv, NP) — page dim innermost, online softmax in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, tpu_compiler_params
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, page_size: int, group: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    live = j * page_size < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (group, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (PS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(q.shape[-1]))
+        kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = jnp.broadcast_to(l_ref[:, :1] * alpha + p.sum(1, keepdims=True),
+                                      l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    j_final = jnp.maximum((length - 1) // page_size, 0)
+
+    @pl.when(j == j_final)
+    def _write():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, k_pool, v_pool, page_table, lengths, *,
+                        interpret: bool = True):
+    """q: (B,H,D); pools: (P,PS,Hkv,D); page_table: (B,NP); lengths: (B,)."""
+    B, H, D = q.shape
+    P, PS, Hkv, _ = k_pool.shape
+    NP = page_table.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    grid = (B, Hkv, NP)
+    kernel = functools.partial(_kernel, page_size=PS, group=group)
+
+    # q viewed as (B, Hkv, group, D) so each grid step reads one kv-group
+    q4 = q.reshape(B, Hkv, group, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, PS, 1, D), lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, PS, 1, D), lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
+    kwargs = {"compiler_params": params} if params is not None else {}
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(page_table, lengths, q4, k_pool, v_pool)
+    return out.reshape(B, H, D)

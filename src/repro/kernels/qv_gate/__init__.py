@@ -1,0 +1,2 @@
+from repro.kernels.qv_gate.ops import apply_two_qubit_gate  # noqa: F401
+from repro.kernels.qv_gate.ref import apply_two_qubit_gate_ref  # noqa: F401

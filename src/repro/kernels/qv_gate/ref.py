@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: apply a 4x4 unitary to qubits (q1,q2) of a statevector."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apply_two_qubit_gate_ref(state, gate, q1: int, q2: int, n_qubits: int):
+    """state: (2**n,) complex64; gate: (4,4) complex64; q1 != q2 (qubit 0 =
+    least-significant / fastest-varying axis is qubit n-1 in tensor layout)."""
+    assert q1 != q2
+    psi = state.reshape((2,) * n_qubits)
+    # tensor axis of qubit q is (n-1-q): qubit 0 is the last axis
+    a1, a2 = n_qubits - 1 - q1, n_qubits - 1 - q2
+    psi = jnp.moveaxis(psi, (a1, a2), (0, 1))
+    rest = psi.reshape(4, -1)
+    out = gate @ rest
+    out = out.reshape((2, 2) + (2,) * (n_qubits - 2))
+    out = jnp.moveaxis(out, (0, 1), (a1, a2))
+    return out.reshape(-1)

@@ -1,0 +1,17 @@
+"""jit'd wrapper for the 5-point stencil kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.stencil5.stencil5 import stencil5_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("coeff", "tile_h", "interpret"))
+def stencil5(grid, coeff: float, *, tile_h: int = 256, interpret: bool | None = None):
+    """One 5-point stencil sweep with replicated boundaries. grid: (H, W)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return stencil5_fwd(grid, coeff, tile_h=tile_h, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the 5-point stencil (hotspot/SRAD compute phase)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil5_ref(grid, coeff: float):
+    """out = c + coeff*(N + S + E + W - 4c), replicated (clamped) boundaries."""
+    g = grid.astype(jnp.float32)
+    n = jnp.concatenate([g[:1], g[:-1]], axis=0)
+    s = jnp.concatenate([g[1:], g[-1:]], axis=0)
+    w = jnp.concatenate([g[:, :1], g[:, :-1]], axis=1)
+    e = jnp.concatenate([g[:, 1:], g[:, -1:]], axis=1)
+    return (g + coeff * (n + s + e + w - 4.0 * g)).astype(grid.dtype)

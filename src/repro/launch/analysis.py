@@ -1,0 +1,140 @@
+"""Compiled-artifact analysis: cost/memory extraction + HLO collective parsing.
+
+Wire-byte model per device (ring algorithms, n = collective group size):
+  all-reduce       2*(n-1)/n * bytes
+  all-gather       (n-1)/n   * output bytes
+  reduce-scatter   (n-1)     * output (shard) bytes
+  all-to-all       (n-1)/n   * bytes
+  collective-permute         bytes
+Async *-start ops are counted; *-done are skipped (same transfer).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"= (?P<outs>.+?) (?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(?P<dims>[0-9,]+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{(?P<first>[0-9,]+)\}")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m or m.group("dt") not in _DTYPE_BYTES:
+        return 0
+    dims = m.group("dims")
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[m.group("dt")]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective bytes (tensor and wire) by op type."""
+    out: Dict[str, Dict[str, float]] = {}
+    total_wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done(" in line:
+            continue
+        op = m.group("op")
+        nbytes = sum(_shape_bytes(s.group(0))
+                     for s in _SHAPE_RE.finditer(m.group("outs")))
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            dims = [int(x) for x in gi.group("dims").split(",")]
+            n = dims[-1] if len(dims) > 1 else dims[0]
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            n = len(gl.group("first").split(",")) if gl else 2
+        n = max(2, n)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif op == "all-gather":
+            wire = (n - 1) / n * nbytes
+        elif op == "reduce-scatter":
+            wire = float(n - 1) * nbytes
+        elif op == "all-to-all":
+            wire = (n - 1) / n * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        d = out.setdefault(op, {"count": 0, "tensor_bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["tensor_bytes"] += nbytes
+        d["wire_bytes"] += wire
+        total_wire += wire
+    return {"by_op": out, "wire_bytes": total_wire}
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ca = dict(ca or {})
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    m = compiled.memory_analysis()
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    out = {f: float(getattr(m, f, 0)) for f in fields}
+    out["peak_bytes_est"] = (out["argument_size_in_bytes"]
+                             + out["temp_size_in_bytes"]
+                             + out["output_size_in_bytes"]
+                             - out["alias_size_in_bytes"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (the MODEL_FLOPS term; cross-checks the HLO count)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for train, 2*N_active*D for serve (+ attention terms)."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    # attention context flops (per token: 2*2*ctx*H*hd fwd)
+    attn = 0.0
+    if cfg.mixer != "rwkv6":
+        kinds = cfg.layer_kinds()
+        for k in kinds:
+            if k == "attention":
+                ctx = S / 2
+            elif k == "local":
+                ctx = min(cfg.local_window, S / 2)
+            else:
+                continue
+            attn += 4.0 * tokens * ctx * cfg.num_heads * cfg.head_dim
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens + 3.0 * attn
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence; context = full cache
+    dec_tokens = B
+    attn_dec = 0.0
+    if cfg.mixer != "rwkv6":
+        for k in cfg.layer_kinds():
+            ctx = S if k == "attention" else min(cfg.local_window, S)
+            if k in ("attention", "local"):
+                attn_dec += 4.0 * dec_tokens * ctx * cfg.num_heads * cfg.head_dim
+    return 2.0 * n_active * dec_tokens + attn_dec

@@ -1,0 +1,266 @@
+"""Sharding rules: param/optimizer/activation PartitionSpecs for any arch.
+
+Megatron TP over 'model' (QKV/up column-parallel; O/down row-parallel; vocab
+sharded embedding + logits; MoE experts = EP over 'model'), DP over
+('pod','data'), ZeRO-1 optimizer-state sharding over the DP axes. Rules are
+path-pattern based with divisibility guards: a dim is sharded only if
+divisible by the axis size (the exact TP head layout in models/layout.py
+guarantees divisibility for head dims; anything else falls back to
+replication rather than failing).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, dp_size, tp_size
+from repro.models.layers import RunPolicy
+
+# (path regex, spec template) — template entries name mesh axes or None;
+# 'MODEL' is replaced by 'model', 'DP' by the dp axes tuple.
+_PARAM_RULES = [
+    (r"embed/w$", ("MODEL", None)),
+    (r"head/w$", (None, "MODEL")),
+    # attention
+    (r"mixer/wq$", (None, "MODEL", None)),
+    (r"mixer/wk$", (None, "MODEL", None)),
+    (r"mixer/wv$", (None, "MODEL", None)),
+    (r"mixer/wo$", ("MODEL", None, None)),
+    (r"mixer/b[qkv]$", ("MODEL", None)),
+    # dense mlp
+    (r"ffn/w_gate$", (None, "MODEL")),
+    (r"ffn/w_up$", (None, "MODEL")),
+    (r"ffn/w_down$", ("MODEL", None)),
+    (r"ffn/b_up$", ("MODEL",)),
+    # moe (expert parallelism; 3D expert weights)
+    (r"ffn/router$", (None, "MODEL")),
+    (r"ffn/w_gate$", ("MODEL", None, None)),
+    (r"ffn/w_up$", ("MODEL", None, None)),
+    (r"ffn/w_down$", ("MODEL", None, None)),
+    # rg-lru
+    (r"mixer/w_y$", (None, "MODEL")),
+    (r"mixer/w_gate$", (None, "MODEL")),
+    (r"mixer/conv_w$", (None, "MODEL")),
+    (r"mixer/conv_b$", ("MODEL",)),
+    (r"mixer/gate_[ir]$", ("MODEL", None, None)),
+    (r"mixer/bias_[ir]$", ("MODEL",)),
+    (r"mixer/lambda$", ("MODEL",)),
+    (r"mixer/w_out$", ("MODEL", None)),
+    # rwkv6
+    (r"mixer/w[rkvg]$", (None, "MODEL")),
+    (r"mixer/wo$", ("MODEL", None)),
+    (r"mixer/u$", ("MODEL", None)),
+    (r"mixer/w0$", ("MODEL",)),
+    (r"mixer/ln_scale$", ("MODEL",)),
+    (r"mixer/ln_bias$", ("MODEL",)),
+    (r"ffn/wk$", (None, "MODEL")),
+    (r"ffn/wv$", ("MODEL", None)),
+    (r"ffn/wr$", (None, "MODEL")),
+]
+
+
+def _flat_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flat_paths(tree[k], f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flat_paths(v, f"{prefix}{i}/")
+    else:
+        yield prefix[:-1], tree
+
+
+def _guard(spec_t, shape, mesh) -> P:
+    """Drop shardings on non-divisible dims."""
+    parts = []
+    for dim, ax in zip(shape, spec_t + (None,) * (len(shape) - len(spec_t))):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        parts.append(ax if dim % size == 0 else None)
+    return P(*parts)
+
+
+def _resolve(template, mesh):
+    out = []
+    for e in template:
+        if e == "MODEL":
+            out.append("model")
+        elif e == "DP":
+            dp = dp_axes(mesh)
+            out.append(dp if len(dp) > 1 else dp[0])
+        else:
+            out.append(e)
+    return tuple(out)
+
+
+def param_specs(params_shape, mesh):
+    """Tree of PartitionSpec matching the param tree."""
+
+    def spec_for(path: str, leaf) -> P:
+        shape = leaf.shape
+        for pat, template in _PARAM_RULES:
+            if re.search(pat, path):
+                t = _resolve(template, mesh)
+                if len(t) != len(shape):
+                    continue  # e.g. mlp-vs-moe w_gate rules differ in rank
+                return _guard(t, shape, mesh)
+        return P()
+
+    flat = {p: spec_for(p, l) for p, l in _flat_paths(params_shape)}
+    return _rebuild(params_shape, flat)
+
+
+def _rebuild(tree, flat, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _rebuild(tree[k], flat, f"{prefix}{k}/") for k in tree}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(
+            _rebuild(v, flat, f"{prefix}{i}/") for i, v in enumerate(tree))
+    return flat[prefix[:-1]]
+
+
+def stacked_param_specs(p_specs):
+    """Specs for the stacked-layer layout: leading L dim, replicated."""
+    out = dict(p_specs)
+    out["layers"] = jax.tree.map(lambda s: P(None, *s), p_specs["layers"][0],
+                                 is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def stacked_params_sds(params_sds):
+    """ShapeDtypeStructs for the stacked-layer layout."""
+    import jax.numpy as jnp  # noqa: F401
+
+    L = len(params_sds["layers"])
+    out = dict(params_sds)
+    out["layers"] = jax.tree.map(
+        lambda *xs: jax.ShapeDtypeStruct((L,) + xs[0].shape, xs[0].dtype),
+        *params_sds["layers"])
+    return out
+
+
+def zero1_specs(p_specs, params_shape, mesh):
+    """Optimizer-state specs: param spec + extra shard over the DP axes on the
+    first replicated, divisible dim (ZeRO-1)."""
+    dp = dp_axes(mesh)
+    dsz = dp_size(mesh)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def add_dp(spec: P, leaf) -> P:
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (dim, cur) in enumerate(zip(leaf.shape, parts)):
+            if cur is None and dim % dsz == 0:
+                parts[i] = dp_entry
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(add_dp, p_specs, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs(p_specs, params_shape, mesh):
+    z = zero1_specs(p_specs, params_shape, mesh)
+    return {"m": z, "v": z, "master": z, "count": P()}
+
+
+def batch_spec(mesh, *, ndim: int, batch_size: int) -> P:
+    dp = dp_axes(mesh)
+    entry = dp if len(dp) > 1 else dp[0]
+    if batch_size % dp_size(mesh) != 0:
+        entry = None  # e.g. long_500k batch=1: replicate
+    return P(entry, *([None] * (ndim - 1)))
+
+
+def cache_specs_tree(cache_shape, mesh, batch_size: int, *, stacked: bool = False):
+    """Decode-cache specs: batch over DP; head/state dims over 'model'.
+
+    Head/state dims are addressed from the right so the same rules serve the
+    per-layer-list and stacked (L, ...) layouts."""
+    dp = dp_axes(mesh)
+    entry = dp if len(dp) > 1 else dp[0]
+    if batch_size % dp_size(mesh) != 0:
+        entry = None
+    tsz = tp_size(mesh)
+    b_idx = 1 if stacked else 0
+
+    def spec(path: str, leaf) -> P:
+        shp = leaf.shape
+        nd = len(shp)
+        parts = [None] * nd
+        parts[b_idx] = entry
+        tail = None  # (negative) index of the model-sharded dim
+        base = path.split("/")[-1]
+        if base in ("k", "v", "ks", "vs"):
+            tail = -2  # n_kv_eff
+        elif base in ("h", "conv"):
+            tail = -1  # lru width
+        elif base == "s":
+            tail = -3  # rwkv heads
+        if tail is not None and shp[tail] % tsz == 0:
+            parts[nd + tail] = "model"
+        return P(*parts)
+
+    flat = {p: spec(p, l) for p, l in _flat_paths(cache_shape)}
+    return _rebuild(cache_shape, flat)
+
+
+def make_constrain(mesh, *, sequence_parallel: bool = False):
+    """RunPolicy.constrain hook: activation sharding constraints by name."""
+    dp = dp_axes(mesh)
+    entry = dp if len(dp) > 1 else dp[0]
+
+    def constrain(x, name: str):
+        if mesh is None:
+            return x
+        if name == "residual" and x.ndim == 3:
+            if x.shape[0] % dp_size(mesh) != 0:
+                bspec = None
+            else:
+                bspec = entry
+            if sequence_parallel and x.shape[1] % tp_size(mesh) == 0:
+                spec = P(bspec, "model", None)
+            else:
+                spec = P(bspec, None, None)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        if name == "moe_experts" and x.ndim == 3:
+            espec = "model" if x.shape[0] % tp_size(mesh) == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(espec, None, None)))
+        if name == "logits" and x.ndim == 3:
+            bspec = entry if x.shape[0] % dp_size(mesh) == 0 else None
+            vspec = "model" if x.shape[-1] % tp_size(mesh) == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bspec, None, vspec)))
+        return x
+
+    return constrain
+
+
+def make_run_policy(mesh, *, scan_layers: bool = False, remat: bool = False,
+                    attn_q_block: int = 0, attn_kv_block: int = 0,
+                    sequence_parallel: bool = False,
+                    quantize_tp_collectives: bool = False,
+                    kv_cache_quant: bool = False,
+                    moe_impl: str = "dense") -> RunPolicy:
+    from repro.models.transformer import set_policy_tp
+
+    pol = RunPolicy(
+        scan_layers=scan_layers,
+        remat=remat,
+        attn_q_block=attn_q_block,
+        attn_kv_block=attn_kv_block,
+        onehot_embed=mesh is not None and tp_size(mesh) > 1,
+        constrain=make_constrain(mesh, sequence_parallel=sequence_parallel),
+        quantize_tp_collectives=quantize_tp_collectives and mesh is not None,
+        kv_cache_quant=kv_cache_quant,
+        moe_impl=moe_impl,
+        mesh=mesh,
+    )
+    return set_policy_tp(pol, tp_size(mesh) if mesh is not None else 1)

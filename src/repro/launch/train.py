@@ -1,0 +1,91 @@
+"""Training launcher: --arch <id> on the local device set (or a fake mesh).
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 50 --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataLoader, SyntheticLM
+from repro.launch.mesh import dp_size, make_host_mesh, tp_size
+from repro.launch.sharding import make_run_policy, param_specs
+from repro.launch.steps import _named
+from repro.models import init_params
+from repro.runtime import FailureInjector
+from repro.train import Trainer, TrainerConfig, make_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", type=int, default=1, help="data-parallel axis")
+    ap.add_argument("--model", type=int, default=1, help="tensor-parallel axis")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n_dev = args.data * args.model
+    assert n_dev <= len(jax.devices()), (n_dev, len(jax.devices()))
+
+    mesh = make_host_mesh(data=args.data, model=args.model) if n_dev > 1 else None
+    tp = args.model
+    params = init_params(cfg, jax.random.PRNGKey(args.seed), dtype=jnp.float32,
+                         tp=tp)
+    if mesh is not None:
+        params = jax.device_put(params, _named(mesh, param_specs(params, mesh)))
+        policy = make_run_policy(mesh, remat=True)
+    else:
+        from repro.models.layers import RunPolicy
+        from repro.models.transformer import set_policy_tp
+        policy = set_policy_tp(RunPolicy(remat=True), 1)
+
+    state = make_train_state(cfg, params)
+    tc = TrainerConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
+                       grad_accum=args.accum, tp=tp,
+                       compress_grads=args.compress_grads)
+    step = jax.jit(make_train_step(cfg, policy, tc))
+    if mesh is not None:
+        _step = step
+
+        def step(s, b):
+            with mesh:
+                return _step(s, b)
+
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                     global_batch=args.batch, seed=args.seed,
+                     emb_dim=cfg.d_model if cfg.input_kind == "embeddings" else 0)
+    loader = DataLoader(ds)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    injector = FailureInjector.at(args.fail_at) if args.fail_at else None
+    trainer = Trainer(cfg, state, step, loader, ckpt=ckpt,
+                      injector=injector, ckpt_every=args.ckpt_every)
+    out = trainer.run(args.steps)
+    loader.close()
+    losses = [h["loss"] for h in out["history"]]
+    print(f"arch={args.arch} steps={len(losses)} restarts={out['restarts']} "
+          f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f} "
+          f"mean_dt={np.mean([h['dt'] for h in out['history']]):.3f}s")
+
+
+if __name__ == "__main__":
+    main()

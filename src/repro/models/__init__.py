@@ -1,0 +1,12 @@
+from repro.models.layers import RunPolicy  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    grad_mask,
+    init_params,
+    init_params_specs,
+    loss_fn,
+    prefill,
+    set_policy_tp,
+    sync_replica_grads,
+)

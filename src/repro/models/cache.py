@@ -1,0 +1,66 @@
+"""Decode caches: dense KV, ring-buffer (sliding window), recurrent state.
+
+The *paged* KV cache (software page table; the paper's mechanism applied to
+serving) lives in serve/paged.py + kernels/paged_attention; this module is the
+dense baseline layout used by the dry-run decode cells.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layout import HeadLayout
+
+
+def kv_head_layout(cfg, tp: int) -> HeadLayout:
+    return HeadLayout.make(cfg.num_heads, cfg.num_kv_heads, tp)
+
+
+def init_cache(cfg, B: int, S: int, *, tp: int = 1, dtype=jnp.bfloat16,
+               kv_quant: bool = False) -> List[Dict[str, Any]]:
+    caches: List[Dict[str, Any]] = []
+    if cfg.mixer in ("attention", "rglru_hybrid"):
+        lay = kv_head_layout(cfg, tp)
+    for kind in cfg.layer_kinds():
+        if kind == "attention":
+            kv_dtype = jnp.int8 if kv_quant else dtype
+            c = {
+                "k": jnp.zeros((B, S, lay.n_kv_eff, cfg.head_dim), kv_dtype),
+                "v": jnp.zeros((B, S, lay.n_kv_eff, cfg.head_dim), kv_dtype),
+            }
+            if kv_quant:  # per-(token, head) scales
+                c["ks"] = jnp.zeros((B, S, lay.n_kv_eff, 1), jnp.float32)
+                c["vs"] = jnp.zeros((B, S, lay.n_kv_eff, 1), jnp.float32)
+            caches.append(c)
+        elif kind == "local":
+            W = min(cfg.local_window, S)
+            caches.append({
+                "k": jnp.zeros((B, W, lay.n_kv_eff, cfg.head_dim), dtype),
+                "v": jnp.zeros((B, W, lay.n_kv_eff, cfg.head_dim), dtype),
+            })
+        elif kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            caches.append({
+                "h": jnp.zeros((B, w), jnp.float32),
+                "conv": jnp.zeros((B, cfg.conv_width - 1, w), dtype),
+            })
+        elif kind == "rwkv6":
+            hs = cfg.rwkv_head_size
+            H = cfg.d_model // hs
+            caches.append({
+                "s": jnp.zeros((B, H, hs, hs), jnp.float32),
+                "xa": jnp.zeros((B, cfg.d_model), dtype),
+                "xf": jnp.zeros((B, cfg.d_model), dtype),
+            })
+        else:
+            raise ValueError(kind)
+    return caches
+
+
+def cache_specs(cfg, B: int, S: int, *, tp: int = 1, dtype=jnp.bfloat16,
+                kv_quant: bool = False):
+    """ShapeDtypeStruct tree for the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, B, S, tp=tp, dtype=dtype, kv_quant=kv_quant))

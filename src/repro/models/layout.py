@@ -1,0 +1,133 @@
+"""Exact TP head layout: KV-head replication + Q-head zero-padding.
+
+Tensor parallelism over a model axis of size ``tp`` requires head counts
+divisible by ``tp``. Real archs rarely satisfy this (qwen2.5: 40q/8kv, tp=16),
+so we build an *exact* effective layout:
+
+  rep   = smallest r >= 1 with (n_kv * r) % tp == 0     (KV replication)
+  p     = ceil(g / rep), g = n_q / n_kv                 (Q heads per eff KV head)
+  n_kv_eff = n_kv * rep ;  n_q_eff = n_kv_eff * p       (both divisible by tp)
+
+KV replication is the GQA repeat-kv identity transform. Q padding is exact
+because padded heads have zero W_o columns, so whatever they attend to
+contributes nothing. Two trainer hooks preserve exactness *under training*:
+
+  * ``grad_mask``: zeroes gradients of structurally-padded parameters,
+  * ``sync_kv_replica_grads``: sums KV-projection gradients across replicas so
+    replicas remain bit-identical (the sum is the true gradient of the shared
+    logical parameter).
+
+With tp=1 the layout degenerates to the identity. Property- and unit-tests
+assert padded == unpadded for forward and for a multi-step training run.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HeadLayout:
+    n_q: int
+    n_kv: int
+    tp: int
+    rep: int
+    p: int
+    pad: int = 0  # MHA: extra padded (q,kv) pairs instead of replication
+
+    @staticmethod
+    def make(n_q: int, n_kv: int, tp: int) -> "HeadLayout":
+        assert n_q % n_kv == 0, (n_q, n_kv)
+        g = n_q // n_kv
+        if g == 1:
+            # MHA: pad (q,kv) pairs to a multiple of tp. Fake pairs are
+            # isolated (fake q only attends fake kv) and W_o-zeroed => exact,
+            # and strictly cheaper than kv replication (cache + FLOPs).
+            n_eff = math.ceil(n_q / tp) * tp
+            return HeadLayout(n_q=n_q, n_kv=n_kv, tp=tp, rep=1, p=1,
+                              pad=n_eff - n_q)
+        rep = 1
+        while (n_kv * rep) % tp != 0:
+            rep += 1
+        p = math.ceil(g / rep)
+        return HeadLayout(n_q=n_q, n_kv=n_kv, tp=tp, rep=rep, p=p)
+
+    @property
+    def g(self) -> int:
+        return self.n_q // self.n_kv
+
+    @property
+    def n_kv_eff(self) -> int:
+        return self.n_kv * self.rep + self.pad
+
+    @property
+    def n_q_eff(self) -> int:
+        return self.n_kv_eff * self.p
+
+    @property
+    def identity(self) -> bool:
+        return self.n_q_eff == self.n_q and self.n_kv_eff == self.n_kv
+
+    # -- index maps ---------------------------------------------------------
+    def q_src(self) -> np.ndarray:
+        """eff q index -> original q index, or -1 for structural padding."""
+        out = np.full(self.n_q_eff, -1, dtype=np.int64)
+        if self.pad:
+            out[: self.n_q] = np.arange(self.n_q)
+            return out
+        for j in range(self.n_kv):
+            for c in range(self.rep):
+                for s in range(self.p):
+                    l = c * self.p + s  # local q index within the kv group
+                    if l < self.g:
+                        out[(j * self.rep + c) * self.p + s] = j * self.g + l
+        return out
+
+    def kv_src(self) -> np.ndarray:
+        """eff kv index -> original kv index (replicas share a source;
+        MHA pads borrow head 0 — their values are unreachable by real q)."""
+        if self.pad:
+            src = np.concatenate([np.arange(self.n_kv), np.zeros(self.pad)])
+            return src.astype(np.int64)
+        return np.repeat(np.arange(self.n_kv, dtype=np.int64), self.rep)
+
+    def q_pad_mask(self) -> np.ndarray:
+        """bool (n_q_eff,): True where the eff q head is structural padding."""
+        return self.q_src() < 0
+
+    def kv_pad_mask(self) -> np.ndarray:
+        """bool (n_kv_eff,): True for padded MHA kv heads (grads masked)."""
+        out = np.zeros(self.n_kv_eff, bool)
+        if self.pad:
+            out[self.n_kv:] = True
+        return out
+
+    # -- weight expansion (used at init and in equivalence tests) -----------
+    def expand_q(self, w, head_axis: int):
+        """Expand an (..., n_q, ...) tensor to eff layout, zero-filling pads."""
+        import jax.numpy as jnp
+
+        src = self.q_src()
+        taken = jnp.take(w, jnp.asarray(np.where(src < 0, 0, src)), axis=head_axis)
+        mask_shape = [1] * w.ndim
+        mask_shape[head_axis] = self.n_q_eff
+        mask = jnp.asarray((src >= 0).reshape(mask_shape), dtype=w.dtype)
+        return taken * mask
+
+    def expand_kv(self, w, head_axis: int):
+        """Expand an (..., n_kv, ...) tensor to eff layout (replication)."""
+        import jax.numpy as jnp
+
+        return jnp.take(w, jnp.asarray(self.kv_src()), axis=head_axis)
+
+    def reduce_kv_grad(self, g, head_axis: int):
+        """Sum replica grads and broadcast back (keeps replicas identical)."""
+        import jax.numpy as jnp
+
+        shp = list(g.shape)
+        new = shp[:head_axis] + [self.n_kv, self.rep] + shp[head_axis + 1 :]
+        gr = g.reshape(new)
+        s = jnp.sum(gr, axis=head_axis + 1, keepdims=True)
+        return jnp.broadcast_to(s, new).reshape(shp)

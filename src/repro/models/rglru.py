@@ -1,0 +1,103 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+RG-LRU: a_t = exp(-c * softplus(L) * r_t),  h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t)
+with block-diagonal (per-head) input/recurrence gates. Sequence mixing uses
+jax.lax.associative_scan (log-depth, FLOPs fully visible to HLO cost analysis);
+decode is a single fused step carrying (h, conv window).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import RunPolicy, dense_init, zeros_init
+
+_C = 8.0
+
+
+def rglru_init(cfg, key, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    H = cfg.num_heads
+    hw = w // H
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c in ~U[0.9, 0.999] (paper's stable range)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / _C) - 1.0)  # softplus^-1(-log(u)/c)
+    return {
+        "w_y": dense_init(ks[0], (d, w), dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), dtype, in_axis_size=cfg.conv_width),
+        "conv_b": zeros_init((w,), dtype),
+        "gate_i": dense_init(ks[3], (H, hw, hw), dtype, in_axis_size=hw),
+        "gate_r": dense_init(ks[4], (H, hw, hw), dtype, in_axis_size=hw),
+        "bias_i": zeros_init((w,), dtype),
+        "bias_r": zeros_init((w,), dtype),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": dense_init(key, (w, d), dtype),
+    }
+
+
+def _blockdiag(x, w, H):
+    """x: (...,w) @ blockdiag w -> (...,w); w: (H, hw, hw)."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (H, shp[-1] // H))
+    y = jnp.einsum("...hi,hij->...hj", xh, w, preferred_element_type=jnp.float32)
+    return y.reshape(shp).astype(x.dtype)
+
+
+def _gates(cfg, p, xc):
+    H = cfg.num_heads
+    i_t = jax.nn.sigmoid(_blockdiag(xc, p["gate_i"], H).astype(jnp.float32) + p["bias_i"])
+    r_t = jax.nn.sigmoid(_blockdiag(xc, p["gate_r"], H).astype(jnp.float32) + p["bias_r"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r_t  # (B,[S],w) f32, <= 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * i_t * xc.astype(jnp.float32)
+    return jnp.exp(log_a), gated
+
+
+def _conv_train(p, y, conv_width):
+    """Causal depthwise temporal conv via shifts. y: (B,S,w)."""
+    out = y * p["conv_w"][conv_width - 1]
+    for k in range(1, conv_width):
+        shifted = jnp.pad(y, ((0, 0), (k, 0), (0, 0)))[:, : y.shape[1]]
+        out = out + shifted * p["conv_w"][conv_width - 1 - k]
+    return out + p["conv_b"]
+
+
+def rglru_apply(cfg, p, x, policy: RunPolicy, return_cache: bool = False):
+    """Train/prefill over full sequence. x: (B,S,d)."""
+    y = x @ p["w_y"]
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    yc = _conv_train(p, y, cfg.conv_width)
+    a, gated = _gates(cfg, p, yc)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    out = (h * gate).astype(x.dtype)
+    out = out @ p["w_out"]
+    if return_cache:
+        cw = cfg.conv_width
+        cache = {"h": h[:, -1], "conv": y[:, -(cw - 1):]}
+        return out, cache
+    return out
+
+
+def rglru_decode(cfg, p, x, policy: RunPolicy, cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One step. x: (B,1,d); cache: {'h': (B,w) f32, 'conv': (B,cw-1,w)}."""
+    xt = x[:, 0]
+    y = xt @ p["w_y"]  # (B,w)
+    gate = jax.nn.gelu((xt @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    win = jnp.concatenate([cache["conv"], y[:, None]], axis=1)  # (B,cw,w)
+    yc = jnp.einsum("bkw,kw->bw", win, p["conv_w"]) + p["conv_b"]
+    a, gated = _gates(cfg, p, yc)
+    h = a * cache["h"] + gated
+    out = (h * gate).astype(x.dtype) @ p["w_out"]
+    return out[:, None], {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,186 @@
+"""RWKV6 (Finch): attention-free time-mix with data-dependent decay + channel-mix.
+
+wkv6 recurrence per head (K=V=head_size):
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(exp(wlog_t)) S_{t-1} + k_t v_t^T ,   wlog_t = -exp(w0 + lora(x_t)) < 0
+
+`wkv6_ref` is the per-token scan oracle; `wkv6_chunked` is the chunkwise-parallel
+form used by the model (all pairwise decay exponents are differences of cumsums
+with s <= t, hence <= 0: exp() never overflows). Chunks advance under lax.scan;
+see DESIGN.md §Roofline for the while-loop FLOPs-accounting note.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import RunPolicy, dense_init, ones_init, zeros_init
+
+_COMPONENTS = 5  # w, k, v, r, g
+
+
+def rwkv_att_init(cfg, key, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    r = cfg.rwkv_lora_rank
+    ks = jax.random.split(key, 12)
+    w0 = -6.0 + 5.0 * (np.arange(d) / max(1, d - 1)) ** 0.7  # slow->fast decay
+    return {
+        "mu_x": 0.5 * ones_init((d,), dtype),
+        "mu": 0.5 * ones_init((_COMPONENTS, d), dtype),
+        "lora_A": dense_init(ks[0], (d, _COMPONENTS * r), dtype),
+        "lora_B": 0.0 * dense_init(ks[1], (_COMPONENTS, r, d), dtype),
+        "w0": jnp.asarray(w0, jnp.float32),
+        "w_lora_A": dense_init(ks[2], (d, 2 * r), dtype),
+        "w_lora_B": 0.0 * dense_init(ks[3], (2 * r, d), dtype),
+        "wr": dense_init(ks[4], (d, d), dtype),
+        "wk": dense_init(ks[5], (d, d), dtype),
+        "wv": dense_init(ks[6], (d, d), dtype),
+        "wg": dense_init(ks[7], (d, d), dtype),
+        "wo": dense_init(ks[8], (d, d), dtype),
+        "u": 0.1 * dense_init(ks[9], (H, hs), jnp.float32, in_axis_size=1),
+        "ln_scale": ones_init((d,), dtype),
+        "ln_bias": zeros_init((d,), dtype),
+    }
+
+
+def rwkv_ffn_init(cfg, key, dtype) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": 0.5 * ones_init((d,), dtype),
+        "mu_r": 0.5 * ones_init((d,), dtype),
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype),
+        "wr": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv6_ref(r, k, v, wlog, u, s0):
+    """Per-token scan oracle. r,k,v,wlog: (B,S,H,K) ; u: (H,K) ; s0: (B,H,K,K)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, wlog))
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,K)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", rt, u, kt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S) + bonus[..., None] * vt
+        S = jnp.exp(wt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), sT
+
+
+def wkv6_chunked(r, k, v, wlog, u, s0, chunk: int):
+    """Chunkwise-parallel wkv6; exact (all decay exponents <= 0)."""
+    B, S, H, K = r.shape
+    C = min(chunk, S)
+    while S % C:
+        C //= 2
+    n = S // C
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.astype(jnp.float32).reshape(B, n, C, H, K), 3, 2)  # (B,n,H,C,K)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, wlog))
+    lcum = jnp.cumsum(wc, axis=3)  # (B,n,H,C,K)
+    pexc = lcum - wc  # exclusive cumsum  = Lcum_{t-1}
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)  # s < t
+
+    def one_chunk(S0, inp):
+        rt, kt, vt, lc, pe = inp  # (B,H,C,K) each
+        # intra-chunk pairwise decay: exp(P[t] - Lcum[s]) for s<t  (<=0 exponent)
+        E = jnp.exp(pe[:, :, :, None, :] - lc[:, :, None, :, :])  # (B,H,C,C,K)
+        A = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rt, kt, E) * tri
+        bonus = jnp.einsum("bhtk,hk,bhtk->bht", rt, u, kt)
+        A = A + jnp.eye(C, dtype=jnp.float32) * bonus[..., None]
+        y = jnp.einsum("bhts,bhsv->bhtv", A, vt)
+        # inter-chunk: r_t decayed back to chunk start, applied to S0
+        y = y + jnp.einsum("bhtk,bhkv->bhtv", rt * jnp.exp(pe), S0)
+        # state to chunk end
+        decay_end = jnp.exp(lc[:, :, -1:, :] - lc)  # (B,H,C,K), <=0 exponent
+        S1 = jnp.exp(lc[:, :, -1, :])[..., None] * S0 + jnp.einsum(
+            "bhsk,bhsv->bhkv", kt * decay_end, vt)
+        return S1, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lcum, pexc))
+    sT, ys = jax.lax.scan(one_chunk, s0.astype(jnp.float32), xs)
+    ys = jnp.moveaxis(ys, 0, 1)  # (B,n,H,C,K)
+    return jnp.moveaxis(ys, 2, 3).reshape(B, S, H, K).astype(r.dtype), sT
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift mixes -> per-component mixed inputs (5, B,S,d)."""
+    xx = x + sx * p["mu_x"]
+    r = p["lora_B"].shape[1]
+    lo = jnp.tanh(xx @ p["lora_A"])  # (B,S,5r)
+    lo = lo.reshape(lo.shape[:-1] + (_COMPONENTS, r))
+    lo = jnp.einsum("bscr,crd->cbsd", lo, p["lora_B"])
+    mixes = p["mu"][:, None, None, :] + lo  # (5,B,S,d)
+    return x[None] + sx[None] * mixes
+
+
+def rwkv_att_apply(cfg, p, x, policy: RunPolicy, x_prev=None, s0=None,
+                   return_cache: bool = False):
+    """x: (B,S,d). x_prev: (B,d) last token of the previous segment (or zeros)."""
+    B, S, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    sx = shifted - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = (xr @ p["wr"]).reshape(B, S, H, hs)
+    k = (xk @ p["wk"]).reshape(B, S, H, hs)
+    v = (xv @ p["wv"]).reshape(B, S, H, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    wlog = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_lora_A"]) @ p["w_lora_B"])
+    wlog = wlog.reshape(B, S, H, hs)
+    y, sT = wkv6_chunked(r, k, v, wlog, p["u"], s0, policy.rwkv_chunk)
+    y = _head_groupnorm(y.reshape(B, S, d), p["ln_scale"], p["ln_bias"], H)
+    out = (y * g) @ p["wo"]
+    if return_cache:
+        return out, {"s": sT, "x_prev": x[:, -1]}
+    return out
+
+
+def _head_groupnorm(y, scale, bias, H, eps: float = 64e-5):
+    B, S, d = y.shape
+    yf = y.astype(jnp.float32).reshape(B, S, H, d // H)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + eps)).reshape(B, S, d)
+    return (yn * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv_ffn_apply(cfg, p, x, x_prev=None, return_cache: bool = False):
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    sx = shifted - x
+    xk = x + sx * p["mu_k"]
+    xr = x + sx * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"])
+    if return_cache:
+        return out, x[:, -1]
+    return out

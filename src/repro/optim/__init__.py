@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.compression import ef_int8_roundtrip, int8_dequant, int8_quant  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,52 @@
+"""Gradient compression: blockwise int8 quantization with error feedback.
+
+Cross-pod gradient sync at 512+ chips is ICI/DCN-bound; int8 halves bytes vs
+bf16 (4x vs fp32). EF21-style error feedback keeps the compressed SGD
+unbiased-in-the-limit: e_{t+1} = x - D(Q(x)), carried into the next step.
+Property tests bound the roundtrip error and verify EF convergence on a
+quadratic (tests/test_compression.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def int8_quant(x) -> Tuple[jax.Array, jax.Array]:
+    """x: any shape f32 -> (int8 codes (padded, BLOCK-major), scales per block)."""
+    flat, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_dequant(q, scale, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def ef_int8_roundtrip(g, err) -> Tuple[jax.Array, jax.Array]:
+    """One error-feedback compression step: returns (decompressed, new_err).
+
+    The decompressed value is what crosses the wire (as int8+scales); the
+    residual stays local and is added next step.
+    """
+    acc = g.astype(jnp.float32) + err
+    q, s = int8_quant(acc)
+    deq = int8_dequant(q, s, g.shape)
+    return deq, acc - deq

@@ -1,0 +1,3 @@
+from repro.runtime.fault import FailureInjector, SimulatedFailure  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import reshard_tree  # noqa: F401

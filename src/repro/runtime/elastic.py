@@ -1,0 +1,17 @@
+"""Elastic rescaling: move a logical state tree onto a different mesh.
+
+Checkpoints are logically addressed (checkpoint/manager.py), so elastic
+scale-up/down = restore + device_put with the new mesh's shardings. For
+live rescale (no checkpoint round-trip) reshard_tree gathers to host and
+re-places — acceptable at rescale frequency (rare).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def reshard_tree(tree, shardings):
+    """tree of jax/np arrays -> device arrays placed per `shardings` tree."""
+    host = jax.tree.map(lambda a: np.asarray(a), tree)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), host, shardings)

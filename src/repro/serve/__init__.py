@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.paged import PagedKVCache  # noqa: F401

@@ -1,0 +1,136 @@
+"""Batched serving engine: prefill -> paged decode with continuous batching.
+
+Decode uses the paged_attention Pallas kernel over the umem-governed page
+pool. Attention-arch only (recurrent archs serve via the dense decode path
+in models/transformer.py — their state is O(1) in sequence length).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import UnifiedMemory
+from repro.kernels.paged_attention import paged_attention
+from repro.models import prefill as model_prefill
+from repro.models.attention import _out_proj, _project_qkv
+from repro.models.cache import kv_head_layout
+from repro.models.layers import RunPolicy, apply_norm, mlp_apply
+from repro.models import moe as moe_mod
+from repro.models.transformer import embed_in, logits_out, policy_tp
+from repro.serve.paged import PagedKVCache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    sid: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_seqs: int = 8, max_len: int = 512,
+                 page_size: int = 64, policy: Optional[RunPolicy] = None,
+                 um: Optional[UnifiedMemory] = None, greedy: bool = True):
+        assert cfg.mixer == "attention", "paged serving targets attention archs"
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy or RunPolicy()
+        self.layout = kv_head_layout(cfg, policy_tp(self.policy))
+        self.cache = PagedKVCache(cfg, self.layout, max_seqs=max_seqs,
+                                  max_len=max_len, page_size=page_size, um=um)
+        self.requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        self.greedy = greedy
+        self.max_len = max_len
+
+    # ---------------------------------------------------------------- admin
+    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(rid, np.asarray(prompt), max_new_tokens)
+        return rid
+
+    def _active(self) -> List[Request]:
+        return [r for r in self.requests.values() if not r.done and r.sid >= 0]
+
+    def _pending(self) -> List[Request]:
+        return [r for r in self.requests.values() if not r.done and r.sid < 0]
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_one(self, req: Request) -> None:
+        req.sid = self.cache.new_seq()
+        toks = jnp.asarray(req.prompt)[None, :]
+        logits, dense_cache = model_prefill(self.cfg, self.params, toks, self.policy)
+        for layer, kv in enumerate(dense_cache):
+            self.cache.write_prefill(req.sid, layer, kv["k"][0], kv["v"][0])
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(nxt)
+
+    # --------------------------------------------------------------- decode
+    def _decode_batch(self, reqs: List[Request]) -> None:
+        cfg, lay, pol = self.cfg, self.layout, self.policy
+        sids = [r.sid for r in reqs]
+        pos = [int(self.cache.lengths[r.sid]) for r in reqs]
+        tokens = jnp.asarray([[r.generated[-1]] for r in reqs], jnp.int32)
+        for s, p in zip(sids, pos):  # pre-allocate the new token's page
+            self.cache._page_for(s, p)
+        pt, ln = self.cache.batch_view(sids)
+
+        x = embed_in(cfg, self.params, tokens, pol, jnp.asarray(pos)[:, None])
+        for i in range(cfg.num_layers):
+            p = self.params["layers"][i]
+            h = apply_norm(cfg.norm, x, p["norm1"])
+            q, k_new, v_new = _project_qkv(cfg, p["mixer"], h, lay,
+                                           jnp.asarray(pos)[:, None])
+            self.cache.write_token(sids, i, np.asarray(k_new[:, 0]), np.asarray(v_new[:, 0]), pos)
+            B = len(reqs)
+            qd = q.reshape(B, lay.n_q_eff, cfg.head_dim)
+            o = paged_attention(qd, self.cache.k_pools[i], self.cache.v_pools[i],
+                                pt, ln + 1)
+            o = _out_proj(p["mixer"], o[:, None], lay)
+            x = x + o
+            h2 = apply_norm(cfg.norm, x, p["norm2"])
+            if cfg.is_moe:
+                y, _ = moe_mod.moe_apply(cfg, p["ffn"], h2, pol, tp=policy_tp(pol))
+            else:
+                y = mlp_apply(cfg, p["ffn"], h2, pol)
+            x = x + y
+        x = apply_norm(cfg.norm, x, self.params["final_norm"])
+        logits = logits_out(cfg, self.params, x, pol)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        self.cache.commit_token(sids, pos)
+        for r, t in zip(reqs, nxt):
+            r.generated.append(int(t))
+            total = len(r.prompt) + len(r.generated)
+            if len(r.generated) >= r.max_new_tokens or total >= self.max_len - 1:
+                r.done = True
+                self.cache.release(r.sid)
+                r.sid = -1
+
+    # ------------------------------------------------------------------ run
+    def step(self) -> bool:
+        """One engine step: admit pending (prefill) then decode the batch.
+        Returns True while any request is in flight."""
+        for req in self._pending():
+            if np.count_nonzero(~self.cache.active) == 0:
+                break
+            self._prefill_one(req)
+        active = self._active()
+        if active:
+            self._decode_batch(active)
+        return any(not r.done for r in self.requests.values())
+
+    def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        steps = 0
+        while self.step():
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serve did not converge")
+        return {rid: r.generated for rid, r in self.requests.items()}

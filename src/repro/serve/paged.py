@@ -1,0 +1,118 @@
+"""Paged KV cache: a software page table for serving, umem-integrated.
+
+The pool is one allocation in the UnifiedMemory runtime: page residency
+(HBM vs host), access counters and migrations follow the paper's system-
+memory policy — hot sequences' pages migrate device-side, cold ones are
+read remotely. kernels/paged_attention consumes the pool directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Actor, UnifiedMemory, system_policy
+from repro.models.layout import HeadLayout
+
+
+class PagedKVCache:
+    def __init__(self, cfg, layout: HeadLayout, *, max_seqs: int, max_len: int,
+                 page_size: int = 64, num_pages: Optional[int] = None,
+                 dtype=jnp.float32, um: Optional[UnifiedMemory] = None):
+        self.cfg = cfg
+        self.layout = layout
+        self.page_size = page_size
+        self.max_seqs = max_seqs
+        self.pages_per_seq = -(-max_len // page_size)
+        self.num_pages = num_pages or (max_seqs * self.pages_per_seq + 1)
+        N, D = layout.n_kv_eff, cfg.head_dim
+        L = cfg.num_layers
+        self.k_pools = [jnp.zeros((self.num_pages, page_size, N, D), dtype)
+                        for _ in range(L)]
+        self.v_pools = [jnp.zeros((self.num_pages, page_size, N, D), dtype)
+                        for _ in range(L)]
+        self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
+        self.lengths = np.zeros((max_seqs,), np.int32)
+        self.active = np.zeros((max_seqs,), bool)
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))  # 0 = null
+
+        self.um = um
+        self.page_bytes = 2 * L * page_size * N * D * jnp.dtype(dtype).itemsize
+        if um is not None:
+            self.alloc = um.alloc("kv_pool", self.num_pages * self.page_bytes,
+                                  system_policy(page_size=self.page_bytes))
+
+    # ------------------------------------------------------------- slots
+    def new_seq(self) -> int:
+        sid = int(np.nonzero(~self.active)[0][0])
+        self.active[sid] = True
+        self.lengths[sid] = 0
+        self.page_table[sid] = 0
+        return sid
+
+    def release(self, sid: int) -> None:
+        for p in self.page_table[sid]:
+            if p:
+                self._free.append(int(p))
+        self.active[sid] = False
+        self.page_table[sid] = 0
+        self.lengths[sid] = 0
+
+    def _page_for(self, sid: int, pos: int) -> int:
+        j = pos // self.page_size
+        if self.page_table[sid, j] == 0:
+            assert self._free, "page pool exhausted"
+            self.page_table[sid, j] = self._free.pop()
+        return int(self.page_table[sid, j])
+
+    # ------------------------------------------------------------- writes
+    def write_prefill(self, sid: int, layer: int, k, v) -> None:
+        """k,v: (S, N, D) for one sequence; fills pages [0, S)."""
+        S = k.shape[0]
+        PS = self.page_size
+        for j in range(-(-S // PS)):
+            pid = self._page_for(sid, j * PS)
+            blk_k = k[j * PS: (j + 1) * PS]
+            blk_v = v[j * PS: (j + 1) * PS]
+            n = blk_k.shape[0]
+            self.k_pools[layer] = jax.lax.dynamic_update_slice(
+                self.k_pools[layer], blk_k[None], (pid, 0, 0, 0))
+            self.v_pools[layer] = jax.lax.dynamic_update_slice(
+                self.v_pools[layer], blk_v[None], (pid, 0, 0, 0))
+        if layer == self.cfg.num_layers - 1:
+            self.lengths[sid] = S
+            self._touch(sid, S)
+
+    def write_token(self, sid_list, layer: int, k, v, pos_list) -> None:
+        """k,v: (B, N, D) new-token KV for sequences sid_list at pos_list."""
+        PS = self.page_size
+        pids = np.array([self._page_for(s, p) for s, p in zip(sid_list, pos_list)])
+        slots = np.array([p % PS for p in pos_list])
+        kp = self.k_pools[layer].at[pids, slots].set(k)
+        vp = self.v_pools[layer].at[pids, slots].set(v)
+        self.k_pools[layer] = kp
+        self.v_pools[layer] = vp
+
+    def commit_token(self, sid_list, pos_list) -> None:
+        for s, p in zip(sid_list, pos_list):
+            self.lengths[s] = p + 1
+            self._touch(s, 1)
+
+    def _touch(self, sid: int, ntok: int) -> None:
+        if self.um is None:
+            return
+        # account page-granular access in the unified-memory runtime
+        for j in range(-(-int(self.lengths[sid]) // self.page_size)):
+            pid = int(self.page_table[sid, j])
+            lo = pid * self.page_bytes
+            self.um.kernel(reads=[(self.alloc, lo, lo + self.page_bytes)],
+                           actor=Actor.GPU, name=f"kv_seq{sid}")
+
+    # ------------------------------------------------------------- views
+    def batch_view(self, sids):
+        pt = jnp.asarray(self.page_table[sids])
+        ln = jnp.asarray(self.lengths[sids])
+        return pt, ln

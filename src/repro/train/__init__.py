@@ -1,0 +1,1 @@
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step, make_train_state  # noqa: F401

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run sets its own 512-device flag in a
+# subprocess); keep retracing costs down
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,87 @@
+"""The six paper apps: all three memory-management versions run and the
+paper's qualitative claims hold on the modeled Grace Hopper."""
+import pytest
+
+from repro.apps import APP_RUNNERS, run_hotspot, run_qsim, run_srad
+
+SMALL = {
+    "qiskit": dict(n_qubits=12, depth=3),
+    "needle": dict(n=512),
+    "pathfinder": dict(rows=1024, cols=256),
+    "bfs": dict(n_nodes=1 << 12),
+    "hotspot": dict(rows=256, cols=256, iters=6),
+    "srad": dict(rows=256, cols=256, iters=8),
+}
+
+
+@pytest.mark.parametrize("app", sorted(APP_RUNNERS))
+@pytest.mark.parametrize("policy", ["explicit", "managed", "system"])
+def test_app_runs_all_policies(app, policy):
+    r = APP_RUNNERS[app](policy, **SMALL[app])
+    assert r.total > 0
+    assert r.checksum == APP_RUNNERS[app]("explicit", **SMALL[app]).checksum \
+        or policy == "explicit"  # same math regardless of memory policy
+
+
+@pytest.mark.parametrize("app", ["hotspot", "pathfinder", "needle", "bfs"])
+def test_cpu_init_apps_prefer_system_memory(app):
+    """Paper Fig. 3 class 1: system >= managed for CPU-initialized apps."""
+    t = {p: APP_RUNNERS[app](p, **SMALL[app]).time_excluding_cpu_init()
+         for p in ("managed", "system")}
+    assert t["system"] < t["managed"]
+
+
+def test_gpu_init_apps_prefer_managed_memory():
+    """Paper Fig. 3 class 2 / §5.1.2: GPU-side init (srad) favors managed
+    (GPU first-touch of system pages round-trips to the CPU for PTEs)."""
+    kw = dict(SMALL["srad"], iters=2)  # init-dominated regime
+    t = {p: run_srad(p, **kw).time_excluding_cpu_init()
+         for p in ("managed", "system")}
+    assert t["managed"] < t["system"]
+
+
+def test_srad_migration_warmup_crossover():
+    """Paper Fig. 10: system-memory iteration time decreases as access-counter
+    migrations move the working set to HBM; late iterations beat managed."""
+    kw = dict(rows=512, cols=512, iters=12)
+    rs = run_srad("system", **kw)
+    rm = run_srad("managed", **kw)
+    per_s = [d["seconds"] for d in rs.extra["per_iter"]]
+    per_m = [d["seconds"] for d in rm.extra["per_iter"]]
+    assert per_s[0] > per_s[-1]  # warm-up
+    assert per_s[-1] <= per_m[0]  # late system beats managed's fault iteration
+    # remote traffic decays to ~zero once the working set is resident
+    h2d = [d["link_h2d"] for d in rs.extra["per_iter"]]
+    assert h2d[-1] < h2d[1] / 10 or h2d[-1] == 0
+
+
+def test_oversubscription_system_graceful_managed_thrashes():
+    """Paper Fig. 11: at >1x oversubscription system memory degrades gracefully
+    while managed pays eviction+migration storms."""
+    kw = dict(rows=512, cols=512, iters=4)
+    speedups = {}
+    for ratio in (1.5, 3.0):
+        ts = run_hotspot("system", oversub_ratio=ratio, **kw).time_excluding_cpu_init()
+        tm = run_hotspot("managed", oversub_ratio=ratio, **kw).time_excluding_cpu_init()
+        speedups[ratio] = tm / ts
+    assert speedups[1.5] > 1.0
+    assert speedups[3.0] >= speedups[1.5] * 0.9  # non-collapsing with pressure
+
+
+def test_qiskit_prefetch_rescues_managed_oversubscription():
+    """Paper Fig. 12/13: explicit prefetch restores managed-memory throughput
+    under (simulated) oversubscription."""
+    kw = dict(n_qubits=14, depth=2, oversub_ratio=1.3)
+    slow = run_qsim("managed", **kw).phase_times["compute"]
+    fast = run_qsim("managed", use_prefetch=True, **kw).phase_times["compute"]
+    assert fast < slow
+
+
+def test_page_size_alloc_dealloc():
+    """Paper Fig. 6: 64KB pages cut alloc+dealloc cost vs 4KB by >4.6x."""
+    KB = 1024
+    t = {}
+    for ps in (4 * KB, 64 * KB):
+        r = run_hotspot("system", page_size=ps, **SMALL["hotspot"])
+        t[ps] = r.phase_times["alloc"] + r.phase_times["dealloc"]
+    assert t[4 * KB] / t[64 * KB] > 4.6

@@ -1,0 +1,118 @@
+"""Fault tolerance: checkpoint round-trip, failure recovery, elastic reshard."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataLoader, SyntheticLM
+from repro.models import RunPolicy, init_params
+from repro.runtime import FailureInjector, StragglerMonitor, reshard_tree
+from repro.train import Trainer, TrainerConfig, make_train_state, make_train_step
+
+
+def _setup(tmp, ckpt_every=4, fail_at=()):
+    cfg = get_config("yi-6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = make_train_state(cfg, params)
+    tc = TrainerConfig(grad_accum=2, total_steps=50, warmup_steps=2)
+    step = jax.jit(make_train_step(cfg, RunPolicy(), tc))
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    loader = DataLoader(ds)
+    cm = CheckpointManager(tmp, keep_last=2)
+    inj = FailureInjector.at(fail_at) if fail_at else None
+    return cfg, Trainer(cfg, state, step, loader, ckpt=cm, ckpt_every=ckpt_every,
+                        injector=inj)
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as tmp:
+        cfg = get_config("olmoe-1b-7b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        state = make_train_state(cfg, params)
+        cm = CheckpointManager(tmp, async_save=False)
+        cm.save(7, state)
+        step, restored = cm.restore(state)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_failure_recovery_bitwise_replay():
+    """A failed-and-restored run produces the same losses as an uninterrupted
+    one (deterministic data pipeline + logical checkpoints)."""
+    with tempfile.TemporaryDirectory() as t1, tempfile.TemporaryDirectory() as t2:
+        _, tr_plain = _setup(t1)
+        out_plain = tr_plain.run(12)
+        tr_plain.loader.close()
+
+        _, tr_fail = _setup(t2, fail_at=[6, 9])
+        out_fail = tr_fail.run(18)  # budget covers the replayed segments
+        tr_fail.loader.close()
+
+        assert out_fail["restarts"] == 2
+        plain = {h["step"]: h["loss"] for h in out_plain["history"]}
+        replayed = {}
+        for h in out_fail["history"]:
+            if h["step"] in replayed:  # replayed step: must be bit-identical
+                assert h["loss"] == replayed[h["step"]], h
+            replayed[h["step"]] = h["loss"]
+        for s, l in plain.items():
+            assert replayed[s] == l, (s, l, replayed[s])
+
+
+def test_keep_last_pruning_and_atomicity():
+    with tempfile.TemporaryDirectory() as tmp:
+        cfg = get_config("yi-6b").reduced()
+        state = make_train_state(cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        cm = CheckpointManager(tmp, keep_last=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            cm.save(s, state)
+        assert cm.all_steps() == [3, 4]
+        assert not any(d.startswith(".tmp") for d in os.listdir(tmp))
+
+
+def test_elastic_reshard_across_device_counts():
+    """Checkpoint written 'on' one sharding restores to another (1 device:
+    shardings degenerate but the tree/device_put path is exercised)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        cfg = get_config("yi-6b").reduced()
+        state = make_train_state(cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        cm = CheckpointManager(tmp, async_save=False)
+        cm.save(1, state)
+        dev = jax.devices()[0]
+        shardings = jax.tree.map(lambda a: jax.sharding.SingleDeviceSharding(dev),
+                                 state)
+        step, restored = cm.restore(state, shardings=shardings)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_detection_and_hints():
+    mon = StragglerMonitor(window=16, k_mad=4.0)
+    rng = np.random.default_rng(0)
+    for i in range(16):
+        for w in range(4):
+            base = 0.10 + 0.001 * rng.standard_normal()
+            mon.record(f"w{w}", base * (4.0 if (w == 3 and i >= 8) else 1.0))
+    assert mon.stragglers() == ["w3"]
+    hints = mon.rebalance_hint()
+    assert hints["w3"] <= 0.5  # slow worker told to shed microbatches
+    assert hints["w0"] > 0.9
+    assert mon.deadline() > 0.1
+
+
+def test_data_pipeline_determinism_and_resume():
+    ds = SyntheticLM(vocab_size=1000, seq_len=64, global_batch=2, seed=3)
+    a = ds.batch(5)
+    b = ds.batch(5)
+    np.testing.assert_array_equal(a[0], b[0])
+    loader = DataLoader(ds, start_step=0)
+    first = [next(loader)[0] for _ in range(3)]
+    loader.seek(1)
+    again = [next(loader)[0] for _ in range(2)]
+    loader.close()
+    assert first == [0, 1, 2] and again == [1, 2]

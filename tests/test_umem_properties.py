@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) for the unified-memory runtime invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Actor,
+    GRACE_HOPPER,
+    OutOfDeviceMemory,
+    Tier,
+    UnifiedMemory,
+    explicit_policy,
+    managed_policy,
+    system_policy,
+)
+
+KB = 1024
+MB = 1024 * 1024
+
+ranges_st = st.lists(
+    st.tuples(st.integers(0, 63), st.integers(1, 64)), min_size=1, max_size=8)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    page_kb=st.sampled_from([4, 64]),
+    nbytes=st.integers(1, 8 * MB),
+    accesses=st.lists(
+        st.tuples(st.sampled_from(["cpu", "gpu"]), st.floats(0, 1), st.floats(0, 1)),
+        min_size=1, max_size=12),
+)
+def test_first_touch_and_residency(page_kb, nbytes, accesses):
+    """Invariants: a page is mapped by its first toucher's tier; mapped pages
+    never return to UNMAPPED; device usage never exceeds capacity."""
+    um = UnifiedMemory()
+    a = um.alloc("x", nbytes, system_policy(page_kb * KB))
+    t = a.table
+    first_toucher = np.full(t.num_pages, -1)
+    for actor_s, f0, f1 in accesses:
+        lo, hi = sorted((int(f0 * nbytes), int(f1 * nbytes)))
+        if lo == hi:
+            continue
+        actor = Actor.GPU if actor_s == "gpu" else Actor.CPU
+        p0, p1 = t.page_range(lo, hi)
+        newly = [p for p in range(p0, p1) if first_toucher[p] < 0]
+        um.kernel(reads=[(a, lo, hi)], actor=actor)
+        for p in newly:
+            first_toucher[p] = int(actor)
+            assert t.tier[p] == int(actor.home_tier)
+        um.sync()
+        assert um.device_bytes() <= um.hw.device_capacity
+    # mapped pages stay mapped
+    touched = first_toucher >= 0
+    assert (t.tier[touched] != int(Tier.UNMAPPED)).all()
+    assert (t.tier[~touched] == int(Tier.UNMAPPED)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(nbytes=st.integers(64 * KB, 4 * MB), n_kernels=st.integers(1, 8))
+def test_counter_threshold_migration(nbytes, n_kernels):
+    """System memory: pages migrate to device only after the access counter
+    crosses the threshold, and counters reset after migration."""
+    um = UnifiedMemory()
+    a = um.alloc("x", nbytes, system_policy(64 * KB, threshold=256))
+    um.kernel(writes=[(a, 0, nbytes)], actor=Actor.CPU)  # CPU first touch
+    t = a.table
+    for _ in range(n_kernels):
+        um.kernel(reads=[(a, 0, nbytes)], actor=Actor.GPU)
+        um.sync()
+    # a full-page read = page_bytes/grain transactions >= threshold
+    txn_per_pass = (64 * KB) // um.hw.remote_access_grain
+    if txn_per_pass >= 256:
+        assert t.resident_bytes(Tier.DEVICE) > 0
+        moved = t.pages_in(Tier.DEVICE)
+        assert (t.gpu_counter[moved] == 0).all()  # reset on migration
+
+
+@settings(max_examples=30, deadline=None)
+@given(ratio=st.floats(1.2, 4.0))
+def test_oversubscription_policies(ratio):
+    """Managed evicts to fit; system stays host-resident; explicit OOMs."""
+    cap = GRACE_HOPPER.device_capacity
+    nbytes = int(cap * ratio)
+    # explicit: must OOM
+    um = UnifiedMemory()
+    with pytest.raises(OutOfDeviceMemory):
+        um.alloc("x", nbytes, explicit_policy())
+    # managed: GPU touch migrates + evicts, device never over capacity
+    um = UnifiedMemory()
+    a = um.alloc("x", nbytes, managed_policy())
+    step = nbytes // 8
+    for i in range(8):
+        um.kernel(reads=[(a, i * step, (i + 1) * step)], actor=Actor.GPU)
+        assert um.device_bytes() <= cap
+    # system: no eviction pressure; CPU-initialized data stays host-resident
+    um = UnifiedMemory()
+    a = um.alloc("x", nbytes, system_policy(auto_migrate=False))
+    um.kernel(writes=[(a, 0, nbytes)], actor=Actor.CPU)
+    um.kernel(reads=[(a, 0, nbytes)], actor=Actor.GPU)
+    assert a.table.resident_bytes(Tier.DEVICE) == 0
+    assert um.device_bytes() <= cap
+
+
+def test_gpu_first_touch_cost_page_size():
+    """§5.1.2/§5.2: GPU-first-touch PTE init is ~page-count bound — 64KB pages
+    cut init time ~16x vs 4KB."""
+    times = {}
+    for ps in (4 * KB, 64 * KB):
+        um = UnifiedMemory()
+        a = um.alloc("x", 64 * MB, system_policy(ps))
+        with um.phase("gpu_init"):
+            um.kernel(writes=[(a, 0, 64 * MB)], actor=Actor.GPU)
+        times[ps] = um.prof.phase_times["gpu_init"]
+    assert times[4 * KB] > 8 * times[64 * KB]
+
+
+def test_dealloc_cost_page_size():
+    """Fig. 6: de-allocation dominated by per-page cost at 4KB."""
+    times = {}
+    for ps in (4 * KB, 64 * KB):
+        um = UnifiedMemory()
+        a = um.alloc("x", 64 * MB, system_policy(ps))
+        um.kernel(writes=[(a, 0, 64 * MB)], actor=Actor.CPU)
+        with um.phase("dealloc"):
+            um.free(a)
+        times[ps] = um.prof.phase_times["dealloc"]
+    assert times[4 * KB] > 8 * times[64 * KB]
+
+
+def test_prefetch_places_on_device():
+    um = UnifiedMemory()
+    a = um.alloc("x", 8 * MB, managed_policy())
+    um.kernel(writes=[(a, 0, 8 * MB)], actor=Actor.CPU)
+    um.prefetch(a, 0, 8 * MB)
+    assert a.table.resident_bytes(Tier.DEVICE) == 8 * MB
+    tr = um.report()["traffic_total"]
+    assert tr["migrated_in"] == 8 * MB

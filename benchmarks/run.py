@@ -1,5 +1,9 @@
-"""Benchmark harness: one module per paper table/figure. CSV to stdout."""
+"""Benchmark harness: one module per paper table/figure. CSV to stdout.
+
+Exits non-zero if ANY module fails, so CI smoke runs can gate on it.
+"""
 import importlib
+import sys
 import traceback
 
 from benchmarks.common import header
@@ -15,21 +19,26 @@ MODULES = [
     "benchmarks.kernels_micro",
     "benchmarks.lm_serve_paged",
     "benchmarks.lm_roofline",
+    "benchmarks.sim_throughput",
 ]
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    """Run all (or the named) benchmark modules; return a shell exit code."""
+    names = argv if argv else MODULES
     header()
     failed = []
-    for m in MODULES:
+    for m in names:
         try:
             importlib.import_module(m).run()
         except Exception:
             failed.append(m)
             traceback.print_exc()
     if failed:
-        raise SystemExit(f"benchmark failures: {failed}")
+        print(f"benchmark failures: {failed}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main(sys.argv[1:]))

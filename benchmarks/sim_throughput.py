@@ -1,0 +1,84 @@
+"""Simulator throughput: kernel-ops/sec of the UnifiedMemory hot path.
+
+Not a paper figure — this tracks the *runtime's own* speed (the paper's
+§6 page-size sweep needs GB-scale allocations at 4 KB pages, which is only
+tractable if the page-table runtime is extent-based rather than per-page).
+Two workloads per page size (4 KB / 64 KB / 2 MB), both on a 1 GiB buffer:
+
+  stream  -- system policy, GPU reads a 64 MiB sliding window with periodic
+             syncs (counter-based delayed migration path)
+  evict   -- managed policy with an explicit ballast squeezing free device
+             memory to 256 MiB, so every window fault migrates + evicts
+             (the LRU eviction path)
+
+Emits wall-clock us/kernel-op plus kernel-ops/sec and modeled-pages/sec.
+SIM_TP_OPS scales the op count (default 48 stream / 12 evict).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import Actor, UnifiedMemory, explicit_policy, managed_policy, system_policy
+
+from benchmarks.common import emit
+
+KB = 1024
+MB = 1024 * 1024
+GB = 1024 * 1024 * 1024
+
+NBYTES = 1 * GB
+WINDOW = 64 * MB
+PAGE_SIZES = {"4KB": 4 * KB, "64KB": 64 * KB, "2MB": 2 * MB}
+
+
+def _stream(page_size: int, ops: int) -> tuple:
+    um = UnifiedMemory()
+    a = um.alloc("buf", NBYTES, system_policy(page_size))
+    um.kernel(writes=[(a, 0, NBYTES)], actor=Actor.CPU, name="init")
+    t0 = time.perf_counter()
+    pages = 0
+    for i in range(ops):
+        lo = (i * WINDOW) % NBYTES
+        hi = min(lo + WINDOW, NBYTES)
+        um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU)
+        pages += -(-(hi - lo) // page_size)
+        if i % 8 == 7:
+            um.sync()
+    return time.perf_counter() - t0, pages
+
+
+def _evict(page_size: int, ops: int) -> tuple:
+    um = UnifiedMemory()
+    ballast = um.hw.device_capacity - 256 * MB
+    um.alloc("__ballast__", ballast, explicit_policy())
+    a = um.alloc("buf", NBYTES, managed_policy(page_size))
+    um.kernel(writes=[(a, 0, NBYTES)], actor=Actor.CPU, name="init")
+    t0 = time.perf_counter()
+    pages = 0
+    for i in range(ops):
+        lo = (i * WINDOW) % NBYTES
+        hi = min(lo + WINDOW, NBYTES)
+        um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU)
+        pages += -(-(hi - lo) // page_size)
+    return time.perf_counter() - t0, pages
+
+
+def run() -> None:
+    ops = int(os.environ.get("SIM_TP_OPS", "48"))
+    for label, ps in PAGE_SIZES.items():
+        dt, pages = _stream(ps, ops)
+        emit(f"sim_throughput/stream/{label}", dt / ops * 1e6,
+             f"kernel_ops_per_s={ops / dt:.1f};modeled_pages_per_s={pages / dt:.0f}")
+    eops = max(1, ops // 4)
+    for label, ps in PAGE_SIZES.items():
+        dt, pages = _evict(ps, eops)
+        emit(f"sim_throughput/evict/{label}", dt / eops * 1e6,
+             f"kernel_ops_per_s={eops / dt:.1f};modeled_pages_per_s={pages / dt:.0f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

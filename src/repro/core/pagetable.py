@@ -4,14 +4,23 @@ One table per allocation. Pages start *unmapped* (PTEs exist only logically,
 like malloc's lazy mapping); the first toucher maps each page to its tier
 (first-touch policy) and pays the PTE-init cost. Access counters drive the
 delayed migration strategy (threshold notifications, §2.2.1 of the paper).
+
+The table is extent-oriented: callers address pages as [lo_page, hi_page)
+ranges, per-tier residency is tracked with O(1) cached byte/page counters
+(updated incrementally by every mutation), and `tier_runs` exposes the
+run-length (interval) view of the tier map. This keeps GB-scale allocations
+at 4 KB pages tractable — no dense per-page index arrays on the hot path.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from enum import IntEnum
 from typing import Tuple
 
 import numpy as np
+
+# tier-indexed counter slots: index = int(tier) + 1
+_NTIERS = 3
 
 
 class Tier(IntEnum):
@@ -29,6 +38,10 @@ class Actor(IntEnum):
         return Tier.DEVICE if self is Actor.GPU else Tier.HOST
 
 
+# byte deltas applied to the owner's cached residency totals
+ResidencyDelta = Tuple[int, int]  # (host_bytes_delta, device_bytes_delta)
+
+
 @dataclass
 class BlockTable:
     name: str
@@ -42,6 +55,13 @@ class BlockTable:
         self.cpu_counter = np.zeros(self.num_pages, np.int32)
         self.last_access_epoch = np.zeros(self.num_pages, np.int64)
         self.dirty = np.zeros(self.num_pages, bool)
+        # bytes actually covered by the final (possibly partial) page
+        self.tail_bytes = self.nbytes - (self.num_pages - 1) * self.page_size
+        # cached per-tier residency: index int(tier)+1 -> pages / bytes
+        self._tier_pages = np.zeros(_NTIERS, np.int64)
+        self._tier_bytes = np.zeros(_NTIERS, np.int64)
+        self._tier_pages[int(Tier.UNMAPPED) + 1] = self.num_pages
+        self._tier_bytes[int(Tier.UNMAPPED) + 1] = self.nbytes
 
     # -- ranges -------------------------------------------------------------
     def page_range(self, lo: int, hi: int) -> Tuple[int, int]:
@@ -54,28 +74,138 @@ class BlockTable:
     def page_bytes(self, idx: np.ndarray) -> np.ndarray:
         """Actual bytes covered by each page index (last page may be partial)."""
         full = np.full(len(idx), self.page_size, np.int64)
-        tail = self.nbytes - (self.num_pages - 1) * self.page_size
-        full[idx == self.num_pages - 1] = tail
+        full[idx == self.num_pages - 1] = self.tail_bytes
         return full
+
+    def page_bytes_slice(self, p0: int, p1: int) -> np.ndarray:
+        """page_bytes for the contiguous extent [p0, p1) without an index array."""
+        full = np.full(max(0, p1 - p0), self.page_size, np.int64)
+        if p1 == self.num_pages and p1 > p0:
+            full[-1] = self.tail_bytes
+        return full
+
+    def range_bytes(self, p0: int, p1: int) -> int:
+        """O(1) bytes covered by the page extent [p0, p1)."""
+        if p1 <= p0:
+            return 0
+        n = (p1 - p0) * self.page_size
+        if p1 == self.num_pages:
+            n += self.tail_bytes - self.page_size
+        return n
+
+    def _mask_bytes(self, p0: int, p1: int, mask: np.ndarray) -> int:
+        """O(popcount) bytes covered by `mask` over the extent [p0, p1)."""
+        n = int(np.count_nonzero(mask)) * self.page_size
+        if n and p1 == self.num_pages and mask[-1]:
+            n += self.tail_bytes - self.page_size
+        return n
 
     # -- views --------------------------------------------------------------
     def resident_bytes(self, tier: Tier) -> int:
-        idx = np.nonzero(self.tier == int(tier))[0]
-        return int(self.page_bytes(idx).sum()) if len(idx) else 0
+        return int(self._tier_bytes[int(tier) + 1])
+
+    def resident_pages(self, tier: Tier) -> int:
+        return int(self._tier_pages[int(tier) + 1])
 
     def mapped_fraction(self) -> float:
-        return float((self.tier != int(Tier.UNMAPPED)).mean())
+        unmapped = self._tier_pages[int(Tier.UNMAPPED) + 1]
+        return float(1.0 - unmapped / self.num_pages)
 
     def pages_in(self, tier: Tier) -> np.ndarray:
         return np.nonzero(self.tier == int(tier))[0]
 
-    # -- mutations (called by UnifiedMemory) ---------------------------------
-    def map_pages(self, pages: np.ndarray, tier: Tier) -> None:
-        assert (self.tier[pages] == int(Tier.UNMAPPED)).all(), "double map"
-        self.tier[pages] = int(tier)
+    def tier_runs(self, p0: int = 0, p1: int = -1):
+        """Run-length view of the tier map over [p0, p1).
 
-    def move_pages(self, pages: np.ndarray, tier: Tier) -> None:
+        Returns (starts, ends, tiers): maximal extents of constant tier —
+        the interval representation of the page table."""
+        if p1 < 0:
+            p1 = self.num_pages
+        t = self.tier[p0:p1]
+        if len(t) == 0:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.int8))
+        breaks = np.flatnonzero(np.diff(t)) + 1
+        starts = np.concatenate(([0], breaks)) + p0
+        ends = np.concatenate((breaks, [len(t)])) + p0
+        return starts, ends, t[starts - p0]
+
+    # -- mutations (called by UnifiedMemory) ---------------------------------
+    def _account(self, old_tiers: np.ndarray, sizes: np.ndarray,
+                 new_tier: Tier) -> ResidencyDelta:
+        """Move cached counters for pages leaving `old_tiers` -> new_tier."""
+        pages_out = np.bincount(old_tiers.astype(np.int64) + 1,
+                                minlength=_NTIERS)
+        bytes_out = np.bincount(old_tiers.astype(np.int64) + 1,
+                                weights=sizes, minlength=_NTIERS).astype(np.int64)
+        self._tier_pages -= pages_out
+        self._tier_bytes -= bytes_out
+        k = int(new_tier) + 1
+        self._tier_pages[k] += int(pages_out.sum())
+        self._tier_bytes[k] += int(bytes_out.sum())
+        host = int(Tier.HOST) + 1
+        dev = int(Tier.DEVICE) + 1
+        dh = (int(bytes_out.sum()) if k == host else 0) - int(bytes_out[host])
+        dd = (int(bytes_out.sum()) if k == dev else 0) - int(bytes_out[dev])
+        return dh, dd
+
+    def touch_range(self, p0: int, p1: int, epoch: int, write: bool) -> None:
+        """Record an access over [p0, p1): LRU epoch + dirty on writes."""
+        self.last_access_epoch[p0:p1] = epoch
+        if write:
+            self.dirty[p0:p1] = True
+
+    def map_mask(self, p0: int, p1: int, mask: np.ndarray,
+                 tier: Tier) -> ResidencyDelta:
+        """Map the masked (unmapped) pages of extent [p0, p1) into `tier`."""
+        view = self.tier[p0:p1]
+        assert (view[mask] == int(Tier.UNMAPPED)).all(), "double map"
+        view[mask] = int(tier)
+        nbytes = self._mask_bytes(p0, p1, mask)
+        npages = int(np.count_nonzero(mask))
+        self._tier_pages[int(Tier.UNMAPPED) + 1] -= npages
+        self._tier_bytes[int(Tier.UNMAPPED) + 1] -= nbytes
+        self._tier_pages[int(tier) + 1] += npages
+        self._tier_bytes[int(tier) + 1] += nbytes
+        if tier is Tier.HOST:
+            return nbytes, 0
+        if tier is Tier.DEVICE:
+            return 0, nbytes
+        return 0, 0
+
+    def map_pages(self, pages: np.ndarray, tier: Tier) -> ResidencyDelta:
+        assert (self.tier[pages] == int(Tier.UNMAPPED)).all(), "double map"
+        old = self.tier[pages]
+        sizes = self.page_bytes(pages)
+        self.tier[pages] = int(tier)
+        return self._account(old, sizes, tier)
+
+    def move_pages(self, pages: np.ndarray, tier: Tier) -> ResidencyDelta:
+        """Retier mapped pages. `pages` MUST be unique indices: duplicates
+        would double-count the cached residency deltas (and can defeat the
+        contiguity detection below). Every runtime call site passes unique
+        pages (nonzero/flatnonzero/unique products)."""
+        n = len(pages)
+        if n:
+            mn, mx = int(pages.min()), int(pages.max())
+            if mx - mn + 1 == n:  # unique pages => contiguous extent (typical:
+                # streaming windows, LRU victim runs): slice ops, no fancy indexing
+                return self.move_extent(mn, mx + 1, tier)
         assert (self.tier[pages] != int(Tier.UNMAPPED)).all(), "move of unmapped page"
+        old = self.tier[pages]
+        sizes = self.page_bytes(pages)
         self.tier[pages] = int(tier)
         self.gpu_counter[pages] = 0
         self.cpu_counter[pages] = 0
+        return self._account(old, sizes, tier)
+
+    def move_extent(self, p0: int, p1: int, tier: Tier) -> ResidencyDelta:
+        """move_pages for the contiguous extent [p0, p1)."""
+        view = self.tier[p0:p1]
+        assert (view != int(Tier.UNMAPPED)).all(), "move of unmapped page"
+        old = view.copy()
+        sizes = self.page_bytes_slice(p0, p1)
+        view[:] = int(tier)
+        self.gpu_counter[p0:p1] = 0
+        self.cpu_counter[p0:p1] = 0
+        return self._account(old, sizes, tier)

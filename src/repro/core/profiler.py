@@ -37,6 +37,11 @@ class MemoryProfiler:
     phase_traffic: Dict[str, TrafficCounters] = field(
         default_factory=lambda: defaultdict(TrafficCounters))
     _phase: str = "default"
+    # running peaks: sample() is O(1) per op (the runtime hands it cached
+    # residency totals, never re-scanning per-allocation tier arrays) and
+    # report() no longer walks the whole timeline
+    _peak_host: int = 0
+    _peak_device: int = 0
 
     def set_phase(self, name: str) -> None:
         self._phase = name
@@ -46,7 +51,12 @@ class MemoryProfiler:
         return self._phase
 
     def sample(self, t: float, host_bytes: int, device_bytes: int) -> None:
-        self.timeline.append((t, host_bytes, device_bytes + self.driver_baseline))
+        dev = device_bytes + self.driver_baseline
+        self.timeline.append((t, host_bytes, dev))
+        if host_bytes > self._peak_host:
+            self._peak_host = host_bytes
+        if dev > self._peak_device:
+            self._peak_device = dev
 
     def charge(self, seconds: float) -> None:
         self.phase_times[self._phase] += seconds
@@ -66,6 +76,6 @@ class MemoryProfiler:
             "total_time_s": self.total_time(),
             "traffic": {k: vars(v) for k, v in self.phase_traffic.items()},
             "traffic_total": vars(total),
-            "peak_device_bytes": max((d for _, _, d in self.timeline), default=0),
-            "peak_host_bytes": max((h for _, h, _ in self.timeline), default=0),
+            "peak_device_bytes": self._peak_device,
+            "peak_host_bytes": self._peak_host,
         }

@@ -14,18 +14,27 @@ optim/offload) a two-tier HBM/host memory system with:
 Applications interact through alloc/free, phase(), kernel(), copy() and
 prefetch(). Time is *modeled* via the HardwareModel (this container has no
 GPU/TPU); correctness of the application math is real JAX executed on CPU.
+
+The hot path is extent-based: kernel() resolves each byte range to a
+(lo_page, hi_page) extent once and every page-table operation under it —
+first-touch mapping, LRU-epoch touches, fault/granule counting, speculative
+prefetch expansion, LRU victim selection — is vectorized numpy over slice
+views of the extent. Residency totals are cached (updated incrementally on
+every map/move), so profiler sampling is O(1) per op instead of re-scanning
+every allocation's tier array. The charge math is unchanged from the dense
+per-page implementation — modeled times and traffic are bit-identical.
 """
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hardware import GRACE_HOPPER, HardwareModel
 from repro.core.pagetable import Actor, BlockTable, Tier
-from repro.core.policy import PolicyConfig, explicit_policy, managed_policy, system_policy
+from repro.core.policy import PolicyConfig
 from repro.core.profiler import MemoryProfiler
 
 Range = Tuple["Allocation", int, int]  # (alloc, lo, hi) byte range
@@ -39,6 +48,7 @@ class Allocation:
     table: Optional[BlockTable]  # None for explicit (device-resident, no PTEs)
     device_bytes_explicit: int = 0
     pending: Optional[np.ndarray] = None  # system: notification-pending pages
+    pending_count: int = 0  # fast-path: #True entries ever set minus cleared
     freed: bool = False
 
 
@@ -55,6 +65,10 @@ class UnifiedMemory:
         self.allocs: Dict[str, Allocation] = {}
         self.epoch = 0
         self._pending_overlap = 0.0  # async-prefetch seconds hidden under compute
+        # cached residency over live allocations (kept in lockstep with every
+        # BlockTable mutation; makes _sample O(1) per op)
+        self._host_bytes = 0
+        self._device_bytes = 0
 
     # ------------------------------------------------------------------ util
     def _charge(self, seconds: float) -> None:
@@ -62,24 +76,32 @@ class UnifiedMemory:
         self.prof.charge(seconds)
 
     def _sample(self) -> None:
-        self.prof.sample(self.clock, self.host_bytes(), self.device_bytes())
+        self.prof.sample(self.clock, self._host_bytes, self._device_bytes)
+
+    def _apply_delta(self, delta: Tuple[int, int]) -> None:
+        self._host_bytes += delta[0]
+        self._device_bytes += delta[1]
 
     def host_bytes(self) -> int:
-        return sum(a.table.resident_bytes(Tier.HOST) for a in self.allocs.values()
-                   if a.table is not None and not a.freed)
+        return self._host_bytes
 
     def device_bytes(self) -> int:
-        tot = 0
+        return self._device_bytes
+
+    def device_free(self) -> int:
+        return self.hw.device_capacity - self._device_bytes
+
+    def _recompute_residency(self) -> Tuple[int, int]:
+        """Slow-path recount (tests assert it matches the cached totals)."""
+        host = dev = 0
         for a in self.allocs.values():
             if a.freed:
                 continue
-            tot += a.device_bytes_explicit
+            dev += a.device_bytes_explicit
             if a.table is not None:
-                tot += a.table.resident_bytes(Tier.DEVICE)
-        return tot
-
-    def device_free(self) -> int:
-        return self.hw.device_capacity - self.device_bytes()
+                host += a.table.resident_bytes(Tier.HOST)
+                dev += a.table.resident_bytes(Tier.DEVICE)
+        return host, dev
 
     @contextlib.contextmanager
     def phase(self, name: str):
@@ -98,6 +120,7 @@ class UnifiedMemory:
                 raise OutOfDeviceMemory(
                     f"cudaMalloc({name}): {nbytes} > free {self.device_free()}")
             a = Allocation(name, nbytes, policy, table=None, device_bytes_explicit=nbytes)
+            self._device_bytes += nbytes
             self._charge(self.hw.alloc_per_page * -(-nbytes // policy.page_size))
         else:
             table = BlockTable(name, nbytes, policy.page_size)
@@ -112,37 +135,42 @@ class UnifiedMemory:
     def free(self, a: Allocation) -> None:
         assert not a.freed
         if a.table is not None:
-            mapped = int((a.table.tier != int(Tier.UNMAPPED)).sum())
+            mapped = a.table.num_pages - a.table.resident_pages(Tier.UNMAPPED)
+            self._host_bytes -= a.table.resident_bytes(Tier.HOST)
+            self._device_bytes -= a.table.resident_bytes(Tier.DEVICE)
             self._charge(self.hw.dealloc_per_page * mapped)
         else:
+            self._device_bytes -= a.device_bytes_explicit
             self._charge(self.hw.dealloc_per_page *
                          -(-a.nbytes // a.policy.migration_granule))
         a.freed = True
         self._sample()
 
     # ------------------------------------------------------- page-level ops
-    def _first_touch(self, a: Allocation, pages: np.ndarray, actor: Actor) -> None:
+    def _first_touch(self, a: Allocation, p0: int, p1: int, actor: Actor) -> None:
+        """Lazily map the unmapped pages of extent [p0, p1) to the toucher's tier."""
         t = a.table
-        unmapped = pages[t.tier[pages] == int(Tier.UNMAPPED)]
-        if len(unmapped) == 0:
+        unmapped = t.tier[p0:p1] == int(Tier.UNMAPPED)
+        n_unmapped = int(np.count_nonzero(unmapped))
+        if n_unmapped == 0:
             return
         tr = self.prof.traffic()
         if actor is Actor.GPU and a.policy.kind == "system":
             # GPU first-touch of system memory: SMMU fault -> OS on the CPU
             # creates the PTE (the §5.1.2 init bottleneck)
-            self._charge(self.hw.pte_init_gpu * len(unmapped))
-            tr.pte_inits_gpu += len(unmapped)
+            self._charge(self.hw.pte_init_gpu * n_unmapped)
+            tr.pte_inits_gpu += n_unmapped
         elif actor is Actor.GPU:
             # managed: first-touch maps straight into the GPU page table
-            granules = max(1, len(unmapped) * t.page_size // a.policy.migration_granule)
+            granules = max(1, n_unmapped * t.page_size // a.policy.migration_granule)
             self._charge(self.hw.pte_init_cpu * granules)
-            tr.pte_inits_gpu += len(unmapped)
+            tr.pte_inits_gpu += n_unmapped
         else:
-            self._charge(self.hw.pte_init_cpu * len(unmapped))
-            tr.pte_inits_cpu += len(unmapped)
+            self._charge(self.hw.pte_init_cpu * n_unmapped)
+            tr.pte_inits_cpu += n_unmapped
         tier = actor.home_tier
         if tier is Tier.DEVICE:
-            need = int(t.page_bytes(unmapped).sum())
+            need = t._mask_bytes(p0, p1, unmapped)
             if need > self.device_free():
                 if a.policy.kind == "managed":
                     self._evict_lru(need - self.device_free(), exclude=a)
@@ -150,33 +178,60 @@ class UnifiedMemory:
                         tier = Tier.HOST  # spill the remainder
                 else:
                     tier = Tier.HOST  # system memory: map host-side instead
-        t.map_pages(unmapped, tier)
+        self._apply_delta(t.map_mask(p0, p1, unmapped, tier))
 
     def _evict_lru(self, need_bytes: int, exclude: Optional[Allocation] = None) -> None:
-        """Evict LRU managed device-resident granules until need_bytes freed."""
-        victims: List[Tuple[float, Allocation, int]] = []
-        for a in self.allocs.values():
-            if a.freed or a.table is None or a.policy.kind != "managed":
-                continue
+        """Evict LRU managed device-resident pages until need_bytes freed.
+
+        `exclude` shields the faulting allocation's *current-step* working set
+        (pages with last_access_epoch == the in-flight kernel's epoch) from
+        eviction — the faulting allocation never self-evicts pages the same
+        kernel step just touched. Colder pages of the same allocation stay
+        evictable: real UVM evicts an oversubscribed allocation's own LRU
+        pages (the paper's §7 streaming window), so excluding the whole
+        allocation would be wrong. Known trade-off: a kernel touching several
+        managed allocations under pressure may still evict *another*
+        allocation's same-step pages (LRU order makes them last-resort
+        victims); widening the epoch shield to every allocation is semantically
+        attractive but shifts the reproduced fig11 oversubscription curves
+        further from the paper baseline, so it is deliberately not done here.
+        """
+        cands: List[Allocation] = [
+            a for a in self.allocs.values()
+            if not a.freed and a.table is not None and a.policy.kind == "managed"]
+        epochs, sizes, page_idx, alloc_idx = [], [], [], []
+        for i, a in enumerate(cands):
             pages = a.table.pages_in(Tier.DEVICE)
-            for p in pages:
-                victims.append((a.table.last_access_epoch[p], a, p))
-        victims.sort(key=lambda v: v[0])
-        freed = 0
+            if a is exclude and len(pages):
+                pages = pages[a.table.last_access_epoch[pages] < self.epoch]
+            if len(pages) == 0:
+                continue
+            epochs.append(a.table.last_access_epoch[pages])
+            sizes.append(a.table.page_bytes(pages))
+            page_idx.append(pages)
+            alloc_idx.append(np.full(len(pages), i, np.int32))
+        if not epochs:
+            return
+        epochs = np.concatenate(epochs)
+        sizes = np.concatenate(sizes)
+        page_idx = np.concatenate(page_idx)
+        alloc_idx = np.concatenate(alloc_idx)
+        # stable sort == python sort of (epoch) with (alloc, page) insertion
+        # order as tiebreak: the LRU victim order
+        order = np.argsort(epochs, kind="stable")
+        csum = np.cumsum(sizes[order])
+        # take victims while bytes freed *before* each victim is < need
+        chosen = order[(csum - sizes[order]) < need_bytes]
         tr = self.prof.traffic()
-        by_alloc: Dict[str, List[int]] = {}
-        for _, a, p in victims:
-            if freed >= need_bytes:
-                break
-            by_alloc.setdefault(a.name, []).append(p)
-            freed += int(a.table.page_bytes(np.array([p]))[0])
-        for name, plist in by_alloc.items():
-            a = self.allocs[name]
-            pages = np.asarray(plist)
+        chosen_alloc = alloc_idx[chosen]
+        uniq, first = np.unique(chosen_alloc, return_index=True)
+        for ai in uniq[np.argsort(first)]:  # first-appearance (charge) order
+            a = cands[int(ai)]
+            pages = page_idx[chosen[chosen_alloc == ai]]
             # clean pages are just unmapped; only dirty pages copy back
             dirty = pages[a.table.dirty[pages]]
             nbytes = int(a.table.page_bytes(dirty).sum()) if len(dirty) else 0
-            a.table.move_pages(pages, Tier.HOST)
+            self._apply_delta(a.table.move_pages(pages, Tier.HOST))
             a.table.dirty[pages] = False
             self._charge(nbytes / self.hw.link_d2h + self.hw.migrate_per_page * len(pages))
             tr.migrated_out += nbytes
@@ -198,7 +253,7 @@ class UnifiedMemory:
                 need = int(t.page_bytes(pages).sum()) if len(pages) else 0
                 if need == 0:
                     return 0
-        t.move_pages(pages, Tier.DEVICE)
+        self._apply_delta(t.move_pages(pages, Tier.DEVICE))
         tr = self.prof.traffic()
         tr.migrated_in += need
         tr.link_h2d += need
@@ -227,13 +282,14 @@ class UnifiedMemory:
                     continue
                 t = a.table
                 p0, p1 = t.page_range(lo, hi)
-                pages = np.arange(p0, p1)
-                if len(pages) == 0:
+                if p1 <= p0:
                     continue
-                self._first_touch(a, pages, actor)
-                t.last_access_epoch[pages] = self.epoch
-                if is_write:
-                    t.dirty[pages] = True
+                # stamp the access BEFORE first-touch: an eviction triggered
+                # while mapping this extent's unmapped tail must see the
+                # already-resident head as part of the current step's working
+                # set (else a single coalesced range can self-evict its head)
+                t.touch_range(p0, p1, self.epoch, is_write)
+                self._first_touch(a, p0, p1, actor)
 
                 thrashing = False
                 if a.policy.kind == "managed" and actor is Actor.GPU:
@@ -241,51 +297,68 @@ class UnifiedMemory:
                     # when the touched working set cannot fit even after
                     # evicting every other managed page, the driver stops
                     # migrating and serves remote reads (paper §7 Fig. 12)
-                    host_pages = pages[t.tier[pages] == int(Tier.HOST)]
-                    if len(host_pages):
-                        ws = int(t.page_bytes(host_pages).sum())
+                    host_mask = t.tier[p0:p1] == int(Tier.HOST)
+                    n_host = int(np.count_nonzero(host_mask))
+                    if n_host:
+                        ws = t._mask_bytes(p0, p1, host_mask)
                         evictable = sum(
                             o.table.resident_bytes(Tier.DEVICE)
                             for o in self.allocs.values()
                             if o is not a and not o.freed and o.table is not None
                             and o.policy.kind == "managed")
                         thrashing = ws > self.device_free() + evictable
-                    if len(host_pages) and not thrashing:
+                    if n_host and not thrashing:
                         gran_pages = max(1, a.policy.migration_granule // t.page_size)
+                        host_pages = p0 + np.flatnonzero(host_mask)
                         granules = np.unique(host_pages // gran_pages)
                         nfaults = len(granules)
                         tr.faults += nfaults
                         self._charge(self.hw.page_fault_cost * nfaults)
+                        # speculative prefetch: each faulting granule drags in
+                        # the next `pf` granules — expand the granule set and
+                        # explode to pages fully vectorized
                         pf = a.policy.speculative_prefetch
-                        mig = set()
-                        for g in granules:
-                            for gg in range(g, min(g + pf, t.num_pages // gran_pages + 1)):
-                                mig.update(range(gg * gran_pages,
-                                                 min((gg + 1) * gran_pages, t.num_pages)))
-                        self._migrate_in(a, np.asarray(sorted(mig)))
+                        gall = np.unique(
+                            (granules[:, None] + np.arange(pf)).ravel())
+                        gall = gall[gall <= t.num_pages // gran_pages]
+                        mig = (gall[:, None] * gran_pages
+                               + np.arange(gran_pages)).ravel()
+                        self._migrate_in(a, mig[mig < t.num_pages])
                 elif a.policy.kind == "managed" and actor is Actor.CPU:
-                    dev_pages = pages[t.tier[pages] == int(Tier.DEVICE)]
-                    if len(dev_pages):
+                    dev_mask = t.tier[p0:p1] == int(Tier.DEVICE)
+                    n_dev = int(np.count_nonzero(dev_mask))
+                    if n_dev:
                         gran_pages = max(1, a.policy.migration_granule // t.page_size)
+                        dev_pages = p0 + np.flatnonzero(dev_mask)
                         granules = np.unique(dev_pages // gran_pages)
                         tr.faults += len(granules)
                         self._charge(self.hw.page_fault_cost * len(granules))
-                        nbytes = int(t.page_bytes(dev_pages).sum())
-                        t.move_pages(dev_pages, Tier.HOST)
+                        nbytes = t._mask_bytes(p0, p1, dev_mask)
+                        self._apply_delta(t.move_pages(dev_pages, Tier.HOST))
                         tr.migrated_out += nbytes
                         tr.link_d2h += nbytes
                         self._charge(nbytes / self.hw.link_d2h
-                                     + self.hw.migrate_per_page * len(dev_pages))
+                                     + self.hw.migrate_per_page * n_dev)
 
                 # account access traffic against current residency
-                pb = t.page_bytes(pages).astype(np.float64)
-                # clip to the actual [lo,hi) range on the boundary pages
-                pb[0] -= lo - p0 * t.page_size
-                if p1 * t.page_size > hi:
-                    pb[-1] -= p1 * t.page_size - hi
-                on_dev = t.tier[pages] == int(Tier.DEVICE)
-                dev_b = float(pb[on_dev].sum())
-                host_b = float(pb[~on_dev].sum())
+                on_dev = t.tier[p0:p1] == int(Tier.DEVICE)
+                n_dev_pages = int(np.count_nonzero(on_dev))
+                if n_dev_pages in (0, p1 - p0):
+                    # extent fully resident on one tier: the clipped page-byte
+                    # sum telescopes to hi - lo (minus the tail-page clip the
+                    # dense path applies when the final partial page is hit)
+                    tot = float(hi - lo)
+                    if p1 == t.num_pages and p1 * t.page_size > hi:
+                        tot -= t.page_size - t.tail_bytes
+                    dev_b, host_b = ((tot, 0.0) if n_dev_pages else (0.0, tot))
+                else:
+                    pb = t.page_bytes_slice(p0, p1).astype(np.float64)
+                    # clip to the actual [lo,hi) range on the boundary pages
+                    pb[0] -= lo - p0 * t.page_size
+                    if p1 * t.page_size > hi:
+                        pb[-1] -= p1 * t.page_size - hi
+                    dev_b = float(pb[on_dev].sum())
+                    host_b = float(pb[~on_dev].sum())
                 if actor is Actor.GPU:
                     local_bytes += dev_b
                     tr.device_local += int(dev_b)
@@ -299,17 +372,21 @@ class UnifiedMemory:
                         remote_h2d += host_b
                         tr.link_h2d += int(host_b)
                     if a.policy.kind == "system" and a.policy.auto_migrate and host_b:
-                        hp = pages[~on_dev]
-                        txn = np.maximum(1, (t.page_bytes(hp) //
-                                             self.hw.remote_access_grain))
-                        before = t.gpu_counter[hp]
-                        t.gpu_counter[hp] = before + txn.astype(np.int32)
+                        host_mask = ~on_dev
+                        sizes = t.page_bytes_slice(p0, p1)[host_mask]
+                        txn = np.maximum(1, sizes // self.hw.remote_access_grain
+                                         ).astype(np.int32)
+                        gc = t.gpu_counter[p0:p1]
+                        before = gc[host_mask]
+                        gc[host_mask] = before + txn
                         crossed = (before < a.policy.counter_threshold) & (
-                            t.gpu_counter[hp] >= a.policy.counter_threshold)
-                        newly = hp[crossed]
-                        if len(newly):
+                            before + txn >= a.policy.counter_threshold)
+                        n_newly = int(np.count_nonzero(crossed))
+                        if n_newly:
+                            newly = p0 + np.flatnonzero(host_mask)[crossed]
                             a.pending[newly] = True
-                            tr.notifications += len(newly)
+                            a.pending_count += n_newly
+                            tr.notifications += n_newly
                 else:
                     local_bytes += host_b
                     tr.host_local += int(host_b)
@@ -343,15 +420,19 @@ class UnifiedMemory:
                 continue
             if not a.policy.auto_migrate or a.pending is None:
                 continue
+            if a.pending_count == 0:  # invariant: count 0 <=> all False
+                continue
             pages = np.nonzero(a.pending & (a.table.tier == int(Tier.HOST)))[0]
             if len(pages) == 0:
                 a.pending[:] = False
+                a.pending_count = 0
                 continue
             budget = a.policy.max_migration_bytes_per_sync
             sizes = a.table.page_bytes(pages)
             keep = np.cumsum(sizes) <= budget
-            moved = self._migrate_in(a, pages[keep])
+            self._migrate_in(a, pages[keep])
             a.pending[pages[keep]] = False
+            a.pending_count -= int(np.count_nonzero(keep))
         self._sample()
         return self.clock - t0
 
@@ -377,8 +458,8 @@ class UnifiedMemory:
         t0 = self.clock
         assert a.table is not None, "prefetch needs a paged allocation"
         p0, p1 = a.table.page_range(lo, hi)
+        self._first_touch(a, p0, p1, Actor.CPU)
         pages = np.arange(p0, p1)
-        self._first_touch(a, pages, Actor.CPU)
         if overlap:
             saved = self.clock
             self._migrate_in(a, pages)
@@ -404,6 +485,8 @@ class UnifiedMemory:
                                  else a.table.resident_bytes(Tier.DEVICE)),
                 "host_bytes": (0 if a.table is None
                                else a.table.resident_bytes(Tier.HOST)),
+                "extents": (0 if a.table is None
+                            else len(a.table.tier_runs()[0])),
                 "freed": a.freed,
             }
             for name, a in self.allocs.items()

@@ -104,12 +104,20 @@ class PagedKVCache:
     def _touch(self, sid: int, ntok: int) -> None:
         if self.um is None:
             return
-        # account page-granular access in the unified-memory runtime
-        for j in range(-(-int(self.lengths[sid]) // self.page_size)):
-            pid = int(self.page_table[sid, j])
-            lo = pid * self.page_bytes
-            self.um.kernel(reads=[(self.alloc, lo, lo + self.page_bytes)],
-                           actor=Actor.GPU, name=f"kv_seq{sid}")
+        # account page-granular access in the unified-memory runtime: batch
+        # every resident page of the sequence into ONE kernel call, coalescing
+        # consecutive pool pages into extents (the pool allocator is mostly
+        # sequential, so a sequence usually collapses to a handful of ranges)
+        npages = -(-int(self.lengths[sid]) // self.page_size)
+        pids = np.sort(self.page_table[sid, :npages].astype(np.int64))
+        if len(pids) == 0:
+            return
+        splits = np.flatnonzero(np.diff(pids) != 1) + 1
+        starts = pids[np.concatenate(([0], splits))]
+        ends = pids[np.concatenate((splits - 1, [len(pids) - 1]))] + 1
+        reads = [(self.alloc, int(s) * self.page_bytes, int(e) * self.page_bytes)
+                 for s, e in zip(starts, ends)]
+        self.um.kernel(reads=reads, actor=Actor.GPU, name=f"kv_seq{sid}")
 
     # ------------------------------------------------------------- views
     def batch_view(self, sids):

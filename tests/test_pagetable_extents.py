@@ -1,0 +1,100 @@
+"""Unit tests for the extent-based BlockTable APIs (tentpole surface)."""
+import numpy as np
+
+from repro.core import Actor, BlockTable, Tier, UnifiedMemory, system_policy
+
+KB = 1024
+MB = 1024 * 1024
+
+
+def test_range_bytes_and_tail_page():
+    t = BlockTable("x", 10 * KB, 4 * KB)  # 3 pages, tail = 2 KB
+    assert t.num_pages == 3
+    assert t.tail_bytes == 2 * KB
+    assert t.range_bytes(0, 3) == 10 * KB
+    assert t.range_bytes(0, 2) == 8 * KB
+    assert t.range_bytes(2, 3) == 2 * KB
+    assert t.range_bytes(1, 1) == 0
+    assert t.page_bytes_slice(0, 3).tolist() == [4 * KB, 4 * KB, 2 * KB]
+    assert t.page_bytes_slice(0, 2).tolist() == [4 * KB, 4 * KB]
+    # matches the scattered-index variant
+    assert t.page_bytes(np.arange(3)).sum() == 10 * KB
+
+
+def test_cached_tier_counters_follow_mutations():
+    t = BlockTable("x", 64 * KB, 4 * KB)  # 16 full pages
+    assert t.resident_bytes(Tier.UNMAPPED) == 64 * KB
+    mask = np.zeros(16, bool)
+    mask[:4] = True
+    dh, dd = t.map_mask(0, 16, mask, Tier.HOST)
+    assert (dh, dd) == (16 * KB, 0)
+    assert t.resident_bytes(Tier.HOST) == 16 * KB
+    assert t.resident_pages(Tier.HOST) == 4
+    dh, dd = t.move_pages(np.arange(4), Tier.DEVICE)
+    assert (dh, dd) == (-16 * KB, 16 * KB)
+    assert t.resident_bytes(Tier.DEVICE) == 16 * KB
+    assert t.resident_bytes(Tier.HOST) == 0
+    assert abs(t.mapped_fraction() - 4 / 16) < 1e-12
+    # counters match a full rescan
+    for tier in (Tier.UNMAPPED, Tier.HOST, Tier.DEVICE):
+        assert t.resident_pages(tier) == len(t.pages_in(tier))
+
+
+def test_move_pages_scattered_vs_extent_equivalent():
+    t1 = BlockTable("a", 64 * KB, 4 * KB)
+    t2 = BlockTable("b", 64 * KB, 4 * KB)
+    for t in (t1, t2):
+        t.map_mask(0, 16, np.ones(16, bool), Tier.HOST)
+    t1.move_pages(np.arange(4, 12), Tier.DEVICE)  # contiguous -> extent path
+    t2.move_pages(np.array([4, 6, 8, 10, 5, 7, 9, 11]), Tier.DEVICE)  # scattered
+    assert (t1.tier == t2.tier).all()
+    assert t1.resident_bytes(Tier.DEVICE) == t2.resident_bytes(Tier.DEVICE) == 32 * KB
+
+
+def test_tier_runs_interval_view():
+    t = BlockTable("x", 64 * KB, 4 * KB)
+    t.map_mask(0, 16, np.ones(16, bool), Tier.HOST)
+    t.move_pages(np.arange(4, 8), Tier.DEVICE)
+    starts, ends, tiers = t.tier_runs()
+    assert starts.tolist() == [0, 4, 8]
+    assert ends.tolist() == [4, 8, 16]
+    assert tiers.tolist() == [int(Tier.HOST), int(Tier.DEVICE), int(Tier.HOST)]
+    # windowed view
+    starts, ends, tiers = t.tier_runs(6, 10)
+    assert starts.tolist() == [6, 8]
+    assert ends.tolist() == [8, 10]
+
+
+def test_touch_range_sets_epoch_and_dirty():
+    t = BlockTable("x", 64 * KB, 4 * KB)
+    t.touch_range(2, 6, epoch=7, write=False)
+    assert (t.last_access_epoch[2:6] == 7).all()
+    assert not t.dirty.any()
+    t.touch_range(4, 8, epoch=9, write=True)
+    assert t.dirty[4:8].all() and not t.dirty[:4].any()
+
+
+def test_kernel_epoch_batching_in_paged_kv_touch():
+    """PagedKVCache._touch batches a sequence's pages into ONE kernel call."""
+    from repro.serve.paged import PagedKVCache
+
+    class _Cfg:
+        head_dim = 4
+        num_layers = 2
+
+    class _Layout:
+        n_kv_eff = 1
+
+    um = UnifiedMemory()
+    kv = PagedKVCache(_Cfg(), _Layout(), max_seqs=2, max_len=64,
+                      page_size=8, um=um)
+    sid = kv.new_seq()
+    kv.lengths[sid] = 40  # 5 pages
+    for j in range(5):
+        kv._page_for(sid, j * 8)
+    e0 = um.epoch
+    kv._touch(sid, 1)
+    assert um.epoch == e0 + 1  # one kernel op, not one per page
+    tbl = kv.alloc.table
+    assert tbl.resident_bytes(Tier.DEVICE) + tbl.resident_bytes(Tier.HOST) \
+        == 5 * kv.page_bytes

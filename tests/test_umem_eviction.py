@@ -1,0 +1,147 @@
+"""Deterministic (non-hypothesis) tests for eviction / oversubscription.
+
+Covers the satellite checklist: LRU victim order by last_access_epoch,
+dirty-page writeback traffic, the thrash-mode fallback in kernel(), the
+_evict_lru `exclude` regression (no self-eviction of pages touched in the
+same kernel step), and the extent runtime's cached-residency invariants.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GRACE_HOPPER,
+    Actor,
+    Tier,
+    UnifiedMemory,
+    managed_policy,
+)
+
+KB = 1024
+MB = 1024 * 1024
+
+
+def _small_hw(capacity=64 * MB):
+    return dataclasses.replace(GRACE_HOPPER, device_capacity=capacity)
+
+
+def _pages(a, lo, hi):
+    p0, p1 = a.table.page_range(lo, hi)
+    return a.table.tier[p0:p1]
+
+
+def test_lru_victim_order_by_epoch_and_dirty_writeback():
+    """Two managed allocations fill the device; the one with the older
+    last_access_epoch is evicted first, and dirty pages charge writeback."""
+    um = UnifiedMemory(hw=_small_hw())
+    a = um.alloc("A", 32 * MB, managed_policy(64 * KB))
+    b = um.alloc("B", 32 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(a, 0, 32 * MB)], actor=Actor.GPU)  # epoch 1
+    um.kernel(writes=[(b, 0, 32 * MB)], actor=Actor.GPU)  # epoch 2
+    assert um.device_free() == 0
+    um.kernel(reads=[(a, 0, 32 * MB)], actor=Actor.GPU)   # epoch 3: A is MRU
+    c = um.alloc("C", 16 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(c, 0, 16 * MB)], actor=Actor.GPU)  # forces eviction
+    # B (epoch 2) is LRU -> loses exactly the needed 16 MB; A untouched
+    assert a.table.resident_bytes(Tier.DEVICE) == 32 * MB
+    assert b.table.resident_bytes(Tier.DEVICE) == 16 * MB
+    assert b.table.resident_bytes(Tier.HOST) == 16 * MB
+    assert c.table.resident_bytes(Tier.DEVICE) == 16 * MB
+    # victims are B's first pages (insertion order within equal epochs)
+    assert (_pages(b, 0, 16 * MB) == int(Tier.HOST)).all()
+    assert (_pages(b, 16 * MB, 32 * MB) == int(Tier.DEVICE)).all()
+    # B was written (dirty) -> evicted bytes copy back over the link
+    tr = um.report()["traffic_total"]
+    assert tr["migrated_out"] == 16 * MB
+    assert tr["link_d2h"] >= 16 * MB
+    assert um.device_bytes() <= um.hw.device_capacity
+
+
+def test_evict_exclude_regression_no_same_step_self_eviction():
+    """_evict_lru must honor `exclude`: an eviction triggered while a kernel
+    step is faulting must never evict pages that same step just touched.
+
+    Construction: D (old, dirty) holds 4 MB; one GPU kernel first-touches A
+    in two ranges. Range 2 needs 12 MB but only D's 4 MB + 4 MB free exist,
+    so the buggy runtime would steal 4 MB from range 1's just-mapped pages;
+    the fixed runtime spills range 2 to host instead."""
+    um = UnifiedMemory(hw=_small_hw())
+    d = um.alloc("D", 4 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(d, 0, 4 * MB)], actor=Actor.GPU)  # epoch 1, dirty
+    a = um.alloc("A", 68 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(a, 0, 56 * MB), (a, 56 * MB, 68 * MB)], actor=Actor.GPU)
+    # range 1's pages (same kernel step) must all still be device-resident
+    assert (_pages(a, 0, 56 * MB) == int(Tier.DEVICE)).all()
+    # D (older epoch) was fair game
+    assert d.table.resident_bytes(Tier.DEVICE) == 0
+    assert d.table.resident_bytes(Tier.HOST) == 4 * MB
+    # range 2 could not fit -> spilled host-side, not served by self-eviction
+    assert (_pages(a, 56 * MB, 68 * MB) == int(Tier.HOST)).all()
+    tr = um.report()["traffic_total"]
+    assert tr["migrated_out"] == 4 * MB  # D's dirty writeback only
+    assert um.device_bytes() <= um.hw.device_capacity
+
+
+def test_evict_exclude_single_range_head_not_self_evicted():
+    """Same bug, single-range shape (what batched KV touches produce): one
+    coalesced range whose unmapped tail forces an eviction must not evict
+    the range's own already-resident head."""
+    um = UnifiedMemory(hw=_small_hw())
+    d = um.alloc("D", 4 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(d, 0, 4 * MB)], actor=Actor.GPU)   # epoch 1, dirty
+    a = um.alloc("A", 68 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(a, 0, 56 * MB)], actor=Actor.GPU)  # head resident
+    um.kernel(reads=[(a, 0, 68 * MB)], actor=Actor.GPU)   # ONE range, 12 MB tail
+    # the head is part of this step's working set -> untouched
+    assert (_pages(a, 0, 56 * MB) == int(Tier.DEVICE)).all()
+    # D (older epoch) evicted; the tail spilled host-side
+    assert d.table.resident_bytes(Tier.DEVICE) == 0
+    assert (_pages(a, 56 * MB, 68 * MB) == int(Tier.HOST)).all()
+    tr = um.report()["traffic_total"]
+    assert tr["migrated_out"] == 4 * MB  # only D's dirty writeback
+    assert um.device_bytes() <= um.hw.device_capacity
+
+
+def test_thrash_mode_fallback():
+    """When the touched working set cannot fit even after evicting every
+    other managed page, kernel() stops migrating and serves remote reads at
+    the degraded thrash bandwidth (paper §7)."""
+    um = UnifiedMemory(hw=_small_hw())
+    a = um.alloc("A", 96 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(a, 0, 96 * MB)], actor=Actor.CPU)
+    with um.phase("thrash"):
+        dt = um.kernel(reads=[(a, 0, 96 * MB)], actor=Actor.GPU)
+    # no migration happened: everything stayed host-resident
+    assert a.table.resident_bytes(Tier.DEVICE) == 0
+    tr = um.report()["traffic"]["thrash"]
+    assert tr["migrated_in"] == 0
+    assert tr["faults"] == 0
+    assert tr["link_h2d"] == 96 * MB
+    # time is bound by the degraded thrash bandwidth, not the healthy link
+    t_expected = 96 * MB / (um.hw.link_h2d * um.hw.managed_thrash_efficiency)
+    assert dt == pytest.approx(t_expected, rel=1e-6, abs=um.hw.kernel_launch * 2)
+
+
+def test_streaming_oversubscription_respects_capacity():
+    """A managed allocation 2x the device streams window-by-window: capacity
+    is never exceeded and the cached residency totals never drift."""
+    um = UnifiedMemory(hw=_small_hw())
+    a = um.alloc("A", 128 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(a, 0, 128 * MB)], actor=Actor.CPU)
+    step = 16 * MB
+    for i in range(128 // 16):
+        um.kernel(reads=[(a, i * step, (i + 1) * step)], actor=Actor.GPU)
+        assert um.device_bytes() <= um.hw.device_capacity
+        assert (um.host_bytes(), um.device_bytes()) == um._recompute_residency()
+    assert um.report()["traffic_total"]["migrated_in"] > 0
+
+
+def test_cached_residency_tracks_free():
+    um = UnifiedMemory(hw=_small_hw())
+    a = um.alloc("A", 8 * MB, managed_policy(64 * KB))
+    um.kernel(writes=[(a, 0, 8 * MB)], actor=Actor.GPU)
+    assert um.device_bytes() == 8 * MB
+    um.free(a)
+    assert (um.host_bytes(), um.device_bytes()) == (0, 0)
+    assert um._recompute_residency() == (0, 0)

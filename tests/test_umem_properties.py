@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) for the unified-memory runtime invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     Actor,

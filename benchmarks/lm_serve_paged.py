@@ -1,4 +1,24 @@
-"""Ours: paged-KV serving with the umem-governed pool (tokens/s + traffic)."""
+"""Ours: paged-KV serving with the umem-governed pool, plus an
+oversubscription sweep.
+
+The sweep applies the fig11 methodology (benchmarks/fig11_oversub.py) to
+serving: the KV page pool is sized to the workload's peak concurrent
+demand and the modeled device capacity is shrunk to ``pool_bytes /
+ratio`` for ratios 1x-1.75x. Under the system policy the overflow pages
+map host-side and decode reads them remotely, so the engine keeps
+serving instead of dying on ``page pool exhausted`` / OOM. Each ratio
+reports wall-clock tokens/s, modeled tokens/s and the remote-access
+share of GPU KV reads, and asserts the generated tokens are
+bit-identical to the in-memory (1.0x) run.
+
+    PYTHONPATH=src:. python benchmarks/lm_serve_paged.py --oversub 1.5
+
+Env: LM_SERVE_SMOKE=1 shrinks the workload for CI smoke runs.
+"""
+import argparse
+import dataclasses
+import os
+import sys
 import time
 
 import jax
@@ -7,24 +27,88 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import TPU_V5E, UnifiedMemory
 from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.models.cache import kv_head_layout
+from repro.serve import PagedKVCache, ServeEngine
 
 from benchmarks.common import emit
 
+PAGE_SIZE = 16
+RATIOS = (1.0, 1.25, 1.5, 1.75)
 
-def run():
-    cfg = get_config("yi-6b").reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    um = UnifiedMemory(hw=TPU_V5E)
-    eng = ServeEngine(cfg, params, max_seqs=4, max_len=128, page_size=16, um=um)
+
+def _workload(cfg, smoke: bool):
     rng = np.random.default_rng(0)
-    for _ in range(4):
-        eng.add_request(rng.integers(2, cfg.vocab_size, 24), 12)
+    n_req = 3 if smoke else 4
+    max_new = 8 if smoke else 12
+    prompts = [rng.integers(2, cfg.vocab_size, int(rng.integers(18, 30)))
+               for _ in range(n_req)]
+    return prompts, max_new
+
+
+def _pool_pages(prompts, max_new) -> int:
+    """Pages for the peak concurrent KV demand (all requests in flight)."""
+    return sum(-(-(len(p) + max_new) // PAGE_SIZE) for p in prompts) + 1
+
+
+def _serve(cfg, params, prompts, max_new, *, num_pages, device_capacity):
+    hw = dataclasses.replace(TPU_V5E, device_capacity=device_capacity)
+    um = UnifiedMemory(hw=hw)
+    eng = ServeEngine(cfg, params, max_seqs=len(prompts), max_len=128,
+                      page_size=PAGE_SIZE, num_pages=num_pages, um=um)
+    for p in prompts:
+        eng.add_request(p, max_new)
     t0 = time.perf_counter()
     out = eng.run_to_completion()
-    dt = time.perf_counter() - t0
-    toks = sum(len(v) for v in out.values())
-    tr = um.report()["traffic_total"]
-    emit("lm_serve/paged_umem", dt / max(1, toks) * 1e6,
-         f"tokens={toks};kv_h2d_MB={tr['link_h2d']/2**20:.2f};"
-         f"pte_gpu={tr['pte_inits_gpu']}")
+    wall = time.perf_counter() - t0
+    return out, eng, um, wall
+
+
+def run(ratios=RATIOS):
+    smoke = bool(os.environ.get("LM_SERVE_SMOKE"))
+    cfg = get_config("yi-6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts, max_new = _workload(cfg, smoke)
+    num_pages = _pool_pages(prompts, max_new)
+    pool_bytes = num_pages * PagedKVCache.page_bytes_for(
+        cfg, kv_head_layout(cfg, 1), PAGE_SIZE)
+
+    baseline = None
+    for ratio in ratios:
+        cap = int(pool_bytes / ratio) if ratio > 1.0 else pool_bytes
+        out, eng, um, wall = _serve(cfg, params, prompts, max_new,
+                                    num_pages=num_pages, device_capacity=cap)
+        toks = sum(len(v) for v in out.values())
+        if ratio == 1.0:
+            baseline = out
+        elif baseline is not None:
+            assert all(out[r] == baseline[r] for r in baseline), \
+                f"oversub {ratio}x diverged from the in-memory run"
+        rep = um.report()
+        tr = rep["traffic_total"]
+        emit(f"lm_serve/oversub{ratio}", wall / max(1, toks) * 1e6,
+             f"tokens={toks};tok_s={toks / wall:.1f};"
+             f"model_tok_s={toks / max(um.clock, 1e-12):.0f};"
+             f"remote_share={rep['remote_access_share']:.3f};"
+             f"preempted={eng.stats.preempted};"
+             f"kv_h2d_MB={tr['link_h2d'] / 2**20:.2f};"
+             f"pte_gpu={tr['pte_inits_gpu']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--oversub", type=float, default=None,
+                    help="run the in-memory baseline plus this pool/HBM ratio "
+                         "(default: sweep 1.0-1.75)")
+    args = ap.parse_args(argv)
+    if args.oversub is not None:
+        if args.oversub < 1.0:
+            ap.error("--oversub must be >= 1.0 (pool/HBM ratio)")
+        ratios = (1.0,) if args.oversub == 1.0 else (1.0, args.oversub)
+    else:
+        ratios = RATIOS
+    run(ratios)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

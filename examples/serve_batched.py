@@ -2,8 +2,17 @@
 with the pool governed by the unified-memory runtime (the paper's system
 policy applied to serving).
 
+The engine is oversubscription-aware: the run below gives it (a) a KV page
+pool smaller than the workload's total demand, so the scheduler preempts
+the youngest sequences (KV demoted host-side) and resumes them as pages
+free up, and (b) a modeled device capacity smaller than the pool, so part
+of the KV stays host-resident and decode reads it remotely over the
+interconnect — the paper's graceful-oversubscription behavior (§7)
+instead of an OOM.
+
     PYTHONPATH=src python examples/serve_batched.py
 """
+import dataclasses
 import time
 
 import jax
@@ -12,19 +21,31 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import TPU_V5E, UnifiedMemory
 from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.models.cache import kv_head_layout
+from repro.serve import PagedKVCache, ServeEngine
 
 
 def main():
     cfg = get_config("yi-6b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    um = UnifiedMemory(hw=TPU_V5E)
-    eng = ServeEngine(cfg, params, max_seqs=4, max_len=128, page_size=16, um=um)
+
+    # 6 requests > 4 slots (continuous batching), a 10-page pool that cannot
+    # hold every admitted sequence (preemption), and a device that only fits
+    # 2/3 of the pool (remote KV reads under 1.5x oversubscription)
+    num_pages, page_size = 10, 16
+    page_bytes = PagedKVCache.page_bytes_for(cfg, kv_head_layout(cfg, 1),
+                                             page_size)
+    hw = dataclasses.replace(
+        TPU_V5E, device_capacity=int(num_pages * page_bytes / 1.5))
+    um = UnifiedMemory(hw=hw)
+    eng = ServeEngine(cfg, params, max_seqs=4, max_len=128,
+                      page_size=page_size, num_pages=num_pages, um=um,
+                      prefill_chunk=32)
 
     rng = np.random.default_rng(0)
-    for i in range(6):  # 6 requests > 4 slots: continuous batching admits
+    for i in range(6):
         plen = int(rng.integers(8, 40))
-        rid = eng.add_request(rng.integers(2, cfg.vocab_size, plen), 12)
+        rid = eng.add_request(rng.integers(2, cfg.vocab_size, plen), 16)
         print(f"request {rid}: prompt_len={plen}")
     t0 = time.perf_counter()
     out = eng.run_to_completion()
@@ -33,8 +54,15 @@ def main():
     print(f"\ngenerated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s on CPU)")
     for rid, t in sorted(out.items()):
         print(f"  req {rid}: {t}")
-    tr = um.report()["traffic_total"]
-    print(f"\numem (modeled v5e): kv pool h2d={tr['link_h2d']/2**20:.1f} MiB, "
+    s = eng.stats
+    print(f"\nscheduler: admitted={s.admitted} preempted={s.preempted} "
+          f"resumed={s.resumed} prefill_chunks={s.prefill_chunks} "
+          f"decode_batches={s.decode_batches}")
+    rep = um.report()
+    tr = rep["traffic_total"]
+    print(f"umem (modeled v5e, pool 1.5x HBM): "
+          f"remote_share={rep['remote_access_share']:.3f}, "
+          f"kv h2d={tr['link_h2d']/2**20:.2f} MiB, "
           f"gpu-first-touch PTEs={tr['pte_inits_gpu']}, "
           f"notifications={tr['notifications']}")
 

@@ -1,0 +1,54 @@
+"""Check that intra-repo markdown links resolve.
+
+Scans every tracked *.md file for [text](target) links and verifies that
+relative targets (after stripping any #anchor) exist on disk. External
+schemes (http/https/mailto) and pure anchors are skipped. Exits non-zero
+listing every broken link, so CI can gate on it.
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files() -> list[Path]:
+    return [p for p in REPO.rglob("*.md")
+            if not any(part.startswith(".") or part in ("node_modules",)
+                       for part in p.relative_to(REPO).parts)]
+
+
+def check(path: Path) -> list[str]:
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (REPO / rel.lstrip("/")) if rel.startswith("/") \
+            else (path.parent / rel)
+        if not resolved.exists():
+            broken.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    broken = [b for p in md_files() for b in check(p)]
+    for b in broken:
+        print(b, file=sys.stderr)
+    print(f"check_docs: {len(md_files())} markdown files, "
+          f"{len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

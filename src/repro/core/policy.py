@@ -8,6 +8,13 @@ managed  -> CUDA managed memory (cudaMallocManaged): fault-driven on-demand
             eviction under device-capacity pressure (§2.3).
 explicit -> cudaMalloc + cudaMemcpy: device-resident, explicit copies, OOM on
             oversubscription.
+
+The serving stack allocates its paged KV pool under the *system* policy
+(one umem page per KV pool page): the scheduler in serve/engine.py moves
+requests through pending -> prefill -> decoding -> preempted -> done,
+admitting against device-memory pressure, demoting preempted sequences'
+pages host-side, and relying on this policy's graceful remote access +
+counter-based delayed migration when the pool exceeds device capacity.
 """
 from __future__ import annotations
 

@@ -15,6 +15,8 @@ from typing import Dict, List, Optional, Tuple
 class TrafficCounters:
     link_h2d: int = 0  # bytes over the interconnect, host->device
     link_d2h: int = 0
+    remote_h2d: int = 0  # GPU kernel reads served remotely from host memory
+    remote_d2h: int = 0  # GPU kernel writes landing remotely in host memory
     device_local: int = 0  # bytes served from device memory
     host_local: int = 0  # bytes served from host memory (CPU-side access)
     faults: int = 0
@@ -76,6 +78,12 @@ class MemoryProfiler:
             "total_time_s": self.total_time(),
             "traffic": {k: vars(v) for k, v in self.phase_traffic.items()},
             "traffic_total": vars(total),
+            # share of GPU kernel read bytes served remotely from host memory
+            # — the oversubscription benchmarks' headline degradation metric
+            # (counted at the kernel remote-access sites, so migrations and
+            # explicit cudaMemcpy traffic never pollute it)
+            "remote_access_share": total.remote_h2d / max(
+                1, total.remote_h2d + total.device_local),
             "peak_device_bytes": self._peak_device,
             "peak_host_bytes": self._peak_host,
         }

@@ -365,12 +365,15 @@ class UnifiedMemory:
                     if thrashing:
                         remote_slow += host_b
                         tr.link_h2d += int(host_b)
+                        tr.remote_h2d += int(host_b)
                     elif is_write:
                         remote_d2h += host_b
                         tr.link_d2h += int(host_b)
+                        tr.remote_d2h += int(host_b)
                     else:
                         remote_h2d += host_b
                         tr.link_h2d += int(host_b)
+                        tr.remote_h2d += int(host_b)
                     if a.policy.kind == "system" and a.policy.auto_migrate and host_b:
                         host_mask = ~on_dev
                         sizes = t.page_bytes_slice(p0, p1)[host_mask]
@@ -470,6 +473,46 @@ class UnifiedMemory:
             self.prof.charge(-dt)
         else:
             self._migrate_in(a, pages)
+        self._sample()
+        return self.clock - t0
+
+    def prefetch_async(self, ranges: Sequence[Range]) -> float:
+        """Async multi-extent prefetch: promote each [lo, hi) byte range of
+        each (alloc, lo, hi) to the device ahead of the kernel that will read
+        it. The migration cost accrues to ``_pending_overlap`` and hides under
+        the next kernel (serve/engine.py promotes a resumed sequence's extents
+        ahead of its decode turn through this). Returns the hidden seconds."""
+        before = self._pending_overlap
+        for a, lo, hi in ranges:
+            self.prefetch(a, lo, hi, overlap=True)
+        return self._pending_overlap - before
+
+    def demote(self, a: Allocation, lo: int, hi: int) -> float:
+        """Demote a range host-side (cudaMemPrefetchAsync-to-cpuDeviceId
+        analogue): device-resident pages of [lo, hi) move to host memory,
+        charged at the d2h link. Unmapped pages stay unmapped. The serve
+        scheduler uses this to push a preempted sequence's KV pages out of
+        HBM before its pool pages are handed to another sequence."""
+        t0 = self.clock
+        assert a.table is not None, "demote needs a paged allocation"
+        t = a.table
+        p0, p1 = t.page_range(lo, hi)
+        if a.pending is not None:
+            # the caller is explicitly cold-marking this range: drop any
+            # pending migration notifications so the next sync() doesn't
+            # promote the just-demoted pages straight back to the device
+            a.pending_count -= int(np.count_nonzero(a.pending[p0:p1]))
+            a.pending[p0:p1] = False
+        pages = p0 + np.flatnonzero(t.tier[p0:p1] == int(Tier.DEVICE))
+        if len(pages):
+            nbytes = int(t.page_bytes(pages).sum())
+            self._apply_delta(t.move_pages(pages, Tier.HOST))
+            t.dirty[pages] = False
+            tr = self.prof.traffic()
+            tr.migrated_out += nbytes
+            tr.link_d2h += nbytes
+            self._charge(nbytes / self.hw.link_d2h
+                         + self.hw.migrate_per_page * len(pages))
         self._sample()
         return self.clock - t0
 

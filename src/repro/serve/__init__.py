@@ -1,2 +1,14 @@
-from repro.serve.engine import ServeEngine  # noqa: F401
+"""Oversubscription-aware continuous-batching LM serving.
+
+`ServeEngine` (engine.py) schedules requests through the states
+pending -> prefill -> decoding -> preempted -> done: memory-pressure
+admission control, chunked prefill, preemption (KV demoted host-side)
+with bit-identical resume, and async promotion of a resumed sequence's
+extents ahead of its decode turn. `PagedKVCache` (paged.py) is the
+umem-governed page pool underneath — it may be allocated larger than
+device capacity, with cold pages read remotely under the system policy
+(the paper's §7 graceful oversubscription applied to serving).
+See docs/serving.md.
+"""
+from repro.serve.engine import EngineStats, Request, SeqState, ServeEngine  # noqa: F401
 from repro.serve.paged import PagedKVCache  # noqa: F401

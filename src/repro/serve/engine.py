@@ -1,27 +1,66 @@
-"""Batched serving engine: prefill -> paged decode with continuous batching.
+"""Oversubscription-aware continuous-batching serve engine.
+
+Requests move through the scheduler states
+
+    pending -> prefill -> decoding -> (preempted <-> decoding)* -> done
+
+driven by one ``step()`` per engine iteration:
+
+  1. **Admission control** — preempted sequences resume first (oldest rid
+     first), then pending requests are admitted FIFO. Admission consults
+     both the KV pool (enough free pages for the whole prompt plus a
+     watermark) and, when a :class:`UnifiedMemory` governs the pool, device
+     memory pressure: a request is only admitted while
+     ``um.device_free()`` covers ``admit_device_fraction`` of its projected
+     KV growth (prompt + max_new_tokens). The pressure gate is skipped when
+     nothing is running, so the engine always makes progress.
+  2. **Chunked prefill** — at most ``prefill_chunk`` prompt tokens are
+     prefilled per step (shared FIFO budget), so one long prompt cannot
+     stall decode for everyone else. Each chunk attends over the KV already
+     in the pool (gathered per layer), which makes chunked and unchunked
+     prefill bit-identical.
+  3. **Async prefetch** — resumed sequences' pool extents are promoted
+     ahead of their decode turn via ``um.prefetch_async`` (cost hides under
+     the decode kernel through ``_pending_overlap``).
+  4. **Batched decode** — one paged-attention step over every decoding
+     sequence. If the pool cannot back the batch's new-token pages, the
+     youngest decoding sequences are *preempted* instead of hitting a
+     ``page pool exhausted`` assert: their KV is demoted host-side
+     (``um.demote`` + ``PagedKVCache.swap_out``) and scattered back on
+     resume, after which the access-counter path re-promotes the hot pages.
 
 Decode uses the paged_attention Pallas kernel over the umem-governed page
-pool. Attention-arch only (recurrent archs serve via the dense decode path
-in models/transformer.py — their state is O(1) in sequence length).
+pool, which may be allocated larger than device capacity (``num_pages``):
+overflow pages live host-side under the system policy and decode reads
+them remotely — the paper's §7 graceful oversubscription, applied to
+serving. Attention-arch only (recurrent archs serve via the dense decode
+path in models/transformer.py — their state is O(1) in sequence length).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import UnifiedMemory
 from repro.kernels.paged_attention import paged_attention
-from repro.models import prefill as model_prefill
-from repro.models.attention import _out_proj, _project_qkv
+from repro.models.attention import _causal_bias, _out_proj, _project_qkv, _sdpa
 from repro.models.cache import kv_head_layout
 from repro.models.layers import RunPolicy, apply_norm, mlp_apply
 from repro.models import moe as moe_mod
 from repro.models.transformer import embed_in, logits_out, policy_tp
 from repro.serve.paged import PagedKVCache
+
+
+class SeqState(Enum):
+    PENDING = "pending"      # not yet admitted
+    PREFILL = "prefill"      # admitted, prompt partially prefilled
+    DECODING = "decoding"    # generating tokens
+    PREEMPTED = "preempted"  # KV swapped host-side, waiting to resume
+    DONE = "done"
 
 
 @dataclass
@@ -31,24 +70,55 @@ class Request:
     max_new_tokens: int
     generated: List[int] = field(default_factory=list)
     sid: int = -1
-    done: bool = False
+    state: SeqState = SeqState.PENDING
+    prefill_pos: int = 0  # prompt tokens whose KV is in the pool
+    saved: Optional[dict] = None  # host-side KV while preempted
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.state is SeqState.DONE
+
+
+@dataclass
+class EngineStats:
+    admitted: int = 0
+    preempted: int = 0
+    resumed: int = 0
+    prefill_chunks: int = 0
+    decode_batches: int = 0
+    decode_tokens: int = 0
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_seqs: int = 8, max_len: int = 512,
-                 page_size: int = 64, policy: Optional[RunPolicy] = None,
-                 um: Optional[UnifiedMemory] = None, greedy: bool = True):
+                 page_size: int = 64, num_pages: Optional[int] = None,
+                 policy: Optional[RunPolicy] = None,
+                 um: Optional[UnifiedMemory] = None, greedy: bool = True,
+                 prefill_chunk: int = 128, watermark_pages: int = 0,
+                 admit_device_fraction: float = 0.5,
+                 counter_threshold: int = 16):
         assert cfg.mixer == "attention", "paged serving targets attention archs"
+        assert set(cfg.layer_kinds()) == {"attention"}, \
+            "the chunked-prefill path needs homogeneous global attention"
         self.cfg = cfg
         self.params = params
         self.policy = policy or RunPolicy()
         self.layout = kv_head_layout(cfg, policy_tp(self.policy))
         self.cache = PagedKVCache(cfg, self.layout, max_seqs=max_seqs,
-                                  max_len=max_len, page_size=page_size, um=um)
+                                  max_len=max_len, page_size=page_size,
+                                  num_pages=num_pages, um=um,
+                                  counter_threshold=counter_threshold)
+        self.um = um
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
         self.greedy = greedy
         self.max_len = max_len
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.watermark_pages = watermark_pages
+        self.admit_device_fraction = admit_device_fraction
+        self.stats = EngineStats()
+        self._needs_prefetch: List[Request] = []
 
     # ---------------------------------------------------------------- admin
     def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
@@ -57,30 +127,191 @@ class ServeEngine:
         self.requests[rid] = Request(rid, np.asarray(prompt), max_new_tokens)
         return rid
 
-    def _active(self) -> List[Request]:
-        return [r for r in self.requests.values() if not r.done and r.sid >= 0]
+    def _in_state(self, state: SeqState) -> List[Request]:
+        return [r for r in self.requests.values() if r.state is state]
 
-    def _pending(self) -> List[Request]:
-        return [r for r in self.requests.values() if not r.done and r.sid < 0]
+    def _projected_kv_bytes(self, req: Request) -> int:
+        """KV bytes this request still has to materialize: its full projected
+        footprint (prompt + max_new_tokens, capped at max_len) minus the pool
+        pages it already holds."""
+        total = min(self.max_len, len(req.prompt) + req.max_new_tokens)
+        have = (int(np.count_nonzero(self.cache.page_table[req.sid]))
+                if req.sid >= 0 else 0)
+        return max(0, self.cache.pages_for(total) - have) * self.cache.page_bytes
+
+    # ----------------------------------------------------------- admission
+    def _admission_ok(self, req: Request, running: List[Request]) -> bool:
+        need = self.cache.pages_for(len(req.prompt)) + 1  # prompt + 1st decode
+        if self.cache.free_pages() < need + self.watermark_pages:
+            return False
+        if self.um is not None and running and self.admit_device_fraction > 0:
+            # memory-pressure gate: only admit while device memory can absorb
+            # a fraction of the projected KV growth of this request PLUS what
+            # the already-running sequences still have to materialize (skipped
+            # when nothing runs, so pressure can never deadlock the engine)
+            demand = self._projected_kv_bytes(req) + sum(
+                self._projected_kv_bytes(r) for r in running)
+            if self.um.device_free() < self.admit_device_fraction * demand:
+                return False
+        return True
+
+    def _admit(self) -> int:
+        progressed = 0
+        running = self._in_state(SeqState.PREFILL) + \
+            self._in_state(SeqState.DECODING)
+        # resume preempted sequences first, oldest rid first (FIFO fairness:
+        # a younger request never resumes past a stalled older one)
+        for req in sorted(self._in_state(SeqState.PREEMPTED), key=lambda r: r.rid):
+            if self.cache.free_slots() == 0:
+                break
+            need = self.cache.pages_for(int(req.saved["len"]) + 1)
+            if self.cache.free_pages() < need + self.watermark_pages:
+                break
+            self._resume(req)
+            running.append(req)
+            progressed += 1
+        if self._in_state(SeqState.PREEMPTED):
+            return progressed  # don't admit fresh work while old work waits
+        for req in sorted(self._in_state(SeqState.PENDING), key=lambda r: r.rid):
+            if self.cache.free_slots() == 0:
+                break
+            if not self._admission_ok(req, running):
+                break
+            req.sid = self.cache.new_seq()
+            req.state = SeqState.PREFILL
+            self.stats.admitted += 1
+            running.append(req)
+            progressed += 1
+        return progressed
+
+    # ---------------------------------------------------------- preemption
+    def _preempt(self, req: Request) -> None:
+        if self.um is not None:
+            for lo, hi in self.cache.seq_extents(req.sid):
+                self.um.demote(self.cache.alloc, lo, hi)
+        req.saved = self.cache.swap_out(req.sid)
+        req.sid = -1
+        req.state = SeqState.PREEMPTED
+        req.preemptions += 1
+        self.stats.preempted += 1
+
+    def _resume(self, req: Request) -> None:
+        req.sid = self.cache.swap_in(req.saved)
+        req.saved = None
+        # a sequence preempted mid-prefill picks its prompt back up
+        req.state = (SeqState.DECODING if req.prefill_pos == len(req.prompt)
+                     else SeqState.PREFILL)
+        self.stats.resumed += 1
+        if self.um is not None:
+            self._needs_prefetch.append(req)
+
+    def _prefetch_resumed(self) -> None:
+        """Promote resumed sequences' extents ahead of their decode turn."""
+        if self.um is None or not self._needs_prefetch:
+            self._needs_prefetch = []
+            return
+        ranges = [(self.cache.alloc, lo, hi)
+                  for req in self._needs_prefetch if req.sid >= 0
+                  for lo, hi in self.cache.seq_extents(req.sid)]
+        self._needs_prefetch = []
+        if ranges:
+            self.um.prefetch_async(ranges)
 
     # -------------------------------------------------------------- prefill
-    def _prefill_one(self, req: Request) -> None:
-        req.sid = self.cache.new_seq()
-        toks = jnp.asarray(req.prompt)[None, :]
-        logits, dense_cache = model_prefill(self.cfg, self.params, toks, self.policy)
-        for layer, kv in enumerate(dense_cache):
-            self.cache.write_prefill(req.sid, layer, kv["k"][0], kv["v"][0])
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.generated.append(nxt)
+    def _prefill_step(self) -> int:
+        budget = self.prefill_chunk
+        chunks = 0
+        for req in sorted(self._in_state(SeqState.PREFILL), key=lambda r: r.rid):
+            if budget == 0:
+                break
+            want = min(budget, len(req.prompt) - req.prefill_pos)
+            # clamp the chunk to the pages the pool can back right now,
+            # keeping one page in reserve per decoding sequence so prefill
+            # never starves the decode batch of its new-token pages; a
+            # stalled chunk retries next step once decode frees pages
+            reserve = len(self._in_state(SeqState.DECODING))
+            afford = (self.cache.allocated_until(req.sid)
+                      + max(0, self.cache.free_pages() - reserve)
+                      * self.cache.page_size
+                      - req.prefill_pos)
+            chunk = min(want, afford)
+            if chunk <= 0:
+                continue
+            self._prefill_chunk_run(req, chunk)
+            budget -= chunk
+            chunks += 1
+        return chunks
+
+    def _prefill_chunk_run(self, req: Request, chunk: int) -> None:
+        cfg, lay, pol = self.cfg, self.layout, self.policy
+        s = req.prefill_pos
+        e = s + chunk
+        self.cache.alloc_range(req.sid, s, e)
+        toks = jnp.asarray(req.prompt[s:e])[None, :]
+        positions = jnp.arange(s, e, dtype=jnp.int32)
+        kpos = jnp.arange(e, dtype=jnp.int32)
+        x = embed_in(cfg, self.params, toks, pol, positions)
+        for i in range(cfg.num_layers):
+            p = self.params["layers"][i]
+            h = apply_norm(cfg.norm, x, p["norm1"])
+            q, k_new, v_new = _project_qkv(cfg, p["mixer"], h, lay, positions)
+            self.cache.write_at(req.sid, i, k_new[0], v_new[0], s)
+            k_full, v_full = self.cache.gather_kv(req.sid, i, e)
+            bias = _causal_bias(positions, kpos, 0)
+            o = _sdpa(q, k_full[None], v_full[None], bias)
+            x = x + _out_proj(p["mixer"], o, lay)
+            h2 = apply_norm(cfg.norm, x, p["norm2"])
+            if cfg.is_moe:
+                y, _ = moe_mod.moe_apply(cfg, p["ffn"], h2, pol, tp=policy_tp(pol))
+            else:
+                y = mlp_apply(cfg, p["ffn"], h2, pol)
+            x = x + y
+        req.prefill_pos = e
+        self.cache.commit_prefill(req.sid, e)
+        self.stats.prefill_chunks += 1
+        if e == len(req.prompt):
+            x = apply_norm(cfg.norm, x, self.params["final_norm"])
+            logits = logits_out(cfg, self.params, x[:, -1:], pol)
+            req.generated.append(int(jnp.argmax(logits[0, -1])))
+            req.state = SeqState.DECODING
 
     # --------------------------------------------------------------- decode
+    def _ensure_decode_pages(self, reqs: List[Request]) -> List[Request]:
+        """Back every batch member's new-token page, preempting the youngest
+        page-holding sequences (their KV demoted host-side) when the pool
+        runs dry. Victims may be decoding OR mid-prefill — only the oldest
+        page-holder is shielded, so it always makes progress."""
+        reqs = sorted(reqs, key=lambda r: r.rid)
+        while True:
+            need = sum(1 for r in reqs
+                       if self.cache.missing_pages(
+                           r.sid, int(self.cache.lengths[r.sid]) + 1))
+            if need <= self.cache.free_pages():
+                break
+            holders = sorted(
+                (r for r in self.requests.values() if r.sid >= 0
+                 and r.state in (SeqState.DECODING, SeqState.PREFILL)),
+                key=lambda r: r.rid)
+            if len(holders) <= 1:
+                raise RuntimeError(
+                    "KV page pool too small for a single sequence: "
+                    f"num_pages={self.cache.num_pages}, "
+                    f"seq needs page {int(self.cache.lengths[reqs[0].sid]) + 1}")
+            victim = holders[-1]  # youngest first: the oldest always runs
+            self._preempt(victim)
+            if victim in reqs:
+                reqs.remove(victim)
+            if not reqs:
+                return reqs  # whole batch preempted; the oldest is prefilling
+        for r in reqs:
+            self.cache.alloc_range(r.sid, 0, int(self.cache.lengths[r.sid]) + 1)
+        return reqs
+
     def _decode_batch(self, reqs: List[Request]) -> None:
         cfg, lay, pol = self.cfg, self.layout, self.policy
         sids = [r.sid for r in reqs]
         pos = [int(self.cache.lengths[r.sid]) for r in reqs]
         tokens = jnp.asarray([[r.generated[-1]] for r in reqs], jnp.int32)
-        for s, p in zip(sids, pos):  # pre-allocate the new token's page
-            self.cache._page_for(s, p)
         pt, ln = self.cache.batch_view(sids)
 
         x = embed_in(cfg, self.params, tokens, pol, jnp.asarray(pos)[:, None])
@@ -89,7 +320,8 @@ class ServeEngine:
             h = apply_norm(cfg.norm, x, p["norm1"])
             q, k_new, v_new = _project_qkv(cfg, p["mixer"], h, lay,
                                            jnp.asarray(pos)[:, None])
-            self.cache.write_token(sids, i, np.asarray(k_new[:, 0]), np.asarray(v_new[:, 0]), pos)
+            self.cache.write_token(sids, i, np.asarray(k_new[:, 0]),
+                                   np.asarray(v_new[:, 0]), pos)
             B = len(reqs)
             qd = q.reshape(B, lay.n_q_eff, cfg.head_dim)
             o = paged_attention(qd, self.cache.k_pools[i], self.cache.v_pools[i],
@@ -106,26 +338,42 @@ class ServeEngine:
         logits = logits_out(cfg, self.params, x, pol)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         self.cache.commit_token(sids, pos)
+        self.stats.decode_batches += 1
+        self.stats.decode_tokens += len(reqs)
         for r, t in zip(reqs, nxt):
             r.generated.append(int(t))
             total = len(r.prompt) + len(r.generated)
             if len(r.generated) >= r.max_new_tokens or total >= self.max_len - 1:
-                r.done = True
+                r.state = SeqState.DONE
                 self.cache.release(r.sid)
                 r.sid = -1
 
     # ------------------------------------------------------------------ run
     def step(self) -> bool:
-        """One engine step: admit pending (prefill) then decode the batch.
+        """One engine step: admit/resume, chunked prefill, prefetch, decode.
         Returns True while any request is in flight."""
-        for req in self._pending():
-            if np.count_nonzero(~self.cache.active) == 0:
-                break
-            self._prefill_one(req)
-        active = self._active()
-        if active:
-            self._decode_batch(active)
-        return any(not r.done for r in self.requests.values())
+        pre0 = self.stats.preempted
+        progress = self._admit()
+        progress += self._prefill_step()
+        decoding = self._in_state(SeqState.DECODING)
+        if decoding:
+            batch = self._ensure_decode_pages(decoding)
+            if batch:
+                self._prefetch_resumed()
+                self._decode_batch(batch)
+                progress += len(batch)
+        # a preemption frees pages for next step's admit/prefill/decode, so it
+        # counts as progress (a genuine deadlock preempts nothing either)
+        progress += self.stats.preempted - pre0
+        if self.um is not None:
+            self.um.sync()  # sync point: apply counter-driven delayed migrations
+        in_flight = any(not r.done for r in self.requests.values())
+        if in_flight and progress == 0:
+            raise RuntimeError(
+                "scheduler stalled: KV pool cannot back any in-flight request "
+                f"(free_pages={self.cache.free_pages()}, "
+                f"states={[r.state.value for r in self.requests.values()]})")
+        return in_flight
 
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         steps = 0

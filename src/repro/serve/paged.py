@@ -4,13 +4,24 @@ The pool is one allocation in the UnifiedMemory runtime: page residency
 (HBM vs host), access counters and migrations follow the paper's system-
 memory policy — hot sequences' pages migrate device-side, cold ones are
 read remotely. kernels/paged_attention consumes the pool directly.
+
+The pool may be allocated *larger than device capacity* (``num_pages``):
+under the system policy first-touch simply maps the overflow host-side and
+decode runs with remote KV pages — the paper's graceful-oversubscription
+behavior (§7) applied to serving. The scheduler in serve/engine.py drives
+the lifecycle: sequences that lose their pool pages to preemption are
+swapped out host-side (``swap_out``) and scattered back on resume
+(``swap_in``), at which point the access-counter path re-promotes their
+pages.
+
+Write paths are vectorized: a whole prefill chunk lands in one fancy-index
+scatter (no per-page Python loop, no ``dynamic_update_slice``), sliced to
+the real block length so partial pages never zero-pad into the pool.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -19,9 +30,18 @@ from repro.models.layout import HeadLayout
 
 
 class PagedKVCache:
+    @staticmethod
+    def page_bytes_for(cfg, layout: HeadLayout, page_size: int,
+                       dtype=jnp.float32) -> int:
+        """Bytes of one pool page (k+v, all layers) — usable without building
+        the pools, e.g. to size a modeled device capacity."""
+        return (2 * cfg.num_layers * page_size * layout.n_kv_eff
+                * cfg.head_dim * jnp.dtype(dtype).itemsize)
+
     def __init__(self, cfg, layout: HeadLayout, *, max_seqs: int, max_len: int,
                  page_size: int = 64, num_pages: Optional[int] = None,
-                 dtype=jnp.float32, um: Optional[UnifiedMemory] = None):
+                 dtype=jnp.float32, um: Optional[UnifiedMemory] = None,
+                 counter_threshold: int = 16):
         self.cfg = cfg
         self.layout = layout
         self.page_size = page_size
@@ -40,12 +60,25 @@ class PagedKVCache:
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))  # 0 = null
 
         self.um = um
-        self.page_bytes = 2 * L * page_size * N * D * jnp.dtype(dtype).itemsize
+        self.page_bytes = self.page_bytes_for(cfg, layout, page_size, dtype)
         if um is not None:
+            # serving pages are big (page_bytes >> the HW remote-access grain),
+            # so one decode touch of a remote page already counts several
+            # transactions — a low threshold keeps the counter path responsive
             self.alloc = um.alloc("kv_pool", self.num_pages * self.page_bytes,
-                                  system_policy(page_size=self.page_bytes))
+                                  system_policy(page_size=self.page_bytes,
+                                                threshold=counter_threshold))
 
     # ------------------------------------------------------------- slots
+    def free_slots(self) -> int:
+        return int(np.count_nonzero(~self.active))
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, ntok: int) -> int:
+        return -(-ntok // self.page_size)
+
     def new_seq(self) -> int:
         sid = int(np.nonzero(~self.active)[0][0])
         self.active[sid] = True
@@ -54,70 +87,131 @@ class PagedKVCache:
         return sid
 
     def release(self, sid: int) -> None:
-        for p in self.page_table[sid]:
-            if p:
-                self._free.append(int(p))
+        row = self.page_table[sid]
+        self._free.extend(int(p) for p in row[row != 0])
         self.active[sid] = False
         self.page_table[sid] = 0
         self.lengths[sid] = 0
 
-    def _page_for(self, sid: int, pos: int) -> int:
-        j = pos // self.page_size
-        if self.page_table[sid, j] == 0:
-            assert self._free, "page pool exhausted"
-            self.page_table[sid, j] = self._free.pop()
-        return int(self.page_table[sid, j])
+    # ------------------------------------------------------- page accounting
+    def alloc_range(self, sid: int, start: int, end: int) -> None:
+        """Ensure pages backing positions [start, end) are allocated."""
+        j0, j1 = start // self.page_size, -(-end // self.page_size)
+        for j in range(j0, j1):
+            if self.page_table[sid, j] == 0:
+                assert self._free, "page pool exhausted"
+                self.page_table[sid, j] = self._free.pop()
+
+    def missing_pages(self, sid: int, end: int) -> int:
+        """Pages still unallocated among those backing positions [0, end)."""
+        j1 = min(self.pages_per_seq, -(-end // self.page_size))
+        return int(np.count_nonzero(self.page_table[sid, :j1] == 0))
+
+    def allocated_until(self, sid: int) -> int:
+        """First position not covered by an already-allocated page."""
+        row = self.page_table[sid]
+        holes = np.flatnonzero(row == 0)
+        j = int(holes[0]) if len(holes) else self.pages_per_seq
+        return j * self.page_size
+
+    def _flat_idx(self, sid: int, start: int, n: int):
+        pos = start + np.arange(n)
+        pids = self.page_table[sid, pos // self.page_size]
+        assert (pids != 0).all(), "write into unallocated page"
+        return pids, pos % self.page_size
 
     # ------------------------------------------------------------- writes
-    def write_prefill(self, sid: int, layer: int, k, v) -> None:
-        """k,v: (S, N, D) for one sequence; fills pages [0, S)."""
+    def write_at(self, sid: int, layer: int, k, v, start: int) -> None:
+        """Scatter S tokens' KV at positions [start, start+S) of sequence sid.
+
+        k, v: (S, N, D). One fancy-index scatter per pool — every page of the
+        chunk lands at once, and the update covers exactly S slots (a partial
+        tail page is never zero-padded)."""
         S = k.shape[0]
-        PS = self.page_size
-        for j in range(-(-S // PS)):
-            pid = self._page_for(sid, j * PS)
-            blk_k = k[j * PS: (j + 1) * PS]
-            blk_v = v[j * PS: (j + 1) * PS]
-            n = blk_k.shape[0]
-            self.k_pools[layer] = jax.lax.dynamic_update_slice(
-                self.k_pools[layer], blk_k[None], (pid, 0, 0, 0))
-            self.v_pools[layer] = jax.lax.dynamic_update_slice(
-                self.v_pools[layer], blk_v[None], (pid, 0, 0, 0))
+        pids, slots = self._flat_idx(sid, start, S)
+        self.k_pools[layer] = self.k_pools[layer].at[pids, slots].set(k)
+        self.v_pools[layer] = self.v_pools[layer].at[pids, slots].set(v)
+
+    def write_prefill(self, sid: int, layer: int, k, v) -> None:
+        """k, v: (S, N, D) for one sequence; fills positions [0, S)."""
+        S = k.shape[0]
+        self.alloc_range(sid, 0, S)
+        self.write_at(sid, layer, k, v, 0)
         if layer == self.cfg.num_layers - 1:
-            self.lengths[sid] = S
-            self._touch(sid, S)
+            self.commit_prefill(sid, S)
+
+    def commit_prefill(self, sid: int, new_len: int) -> None:
+        self.lengths[sid] = new_len
+        self._touch(sid)
 
     def write_token(self, sid_list, layer: int, k, v, pos_list) -> None:
-        """k,v: (B, N, D) new-token KV for sequences sid_list at pos_list."""
-        PS = self.page_size
-        pids = np.array([self._page_for(s, p) for s, p in zip(sid_list, pos_list)])
-        slots = np.array([p % PS for p in pos_list])
-        kp = self.k_pools[layer].at[pids, slots].set(k)
-        vp = self.v_pools[layer].at[pids, slots].set(v)
-        self.k_pools[layer] = kp
-        self.v_pools[layer] = vp
+        """k, v: (B, N, D) new-token KV for sequences sid_list at pos_list."""
+        sids = np.asarray(sid_list)
+        pos = np.asarray(pos_list)
+        pids = self.page_table[sids, pos // self.page_size]
+        assert (pids != 0).all(), "decode write into unallocated page"
+        slots = pos % self.page_size
+        self.k_pools[layer] = self.k_pools[layer].at[pids, slots].set(k)
+        self.v_pools[layer] = self.v_pools[layer].at[pids, slots].set(v)
 
     def commit_token(self, sid_list, pos_list) -> None:
         for s, p in zip(sid_list, pos_list):
             self.lengths[s] = p + 1
-            self._touch(s, 1)
+            self._touch(s)
 
-    def _touch(self, sid: int, ntok: int) -> None:
-        if self.um is None:
-            return
-        # account page-granular access in the unified-memory runtime: batch
-        # every resident page of the sequence into ONE kernel call, coalescing
-        # consecutive pool pages into extents (the pool allocator is mostly
-        # sequential, so a sequence usually collapses to a handful of ranges)
+    # ------------------------------------------------------------- reads
+    def gather_kv(self, sid: int, layer: int, length: int):
+        """Gather positions [0, length) of sequence sid -> (length, N, D) pair."""
+        pids, slots = self._flat_idx(sid, 0, length)
+        return self.k_pools[layer][pids, slots], self.v_pools[layer][pids, slots]
+
+    # ------------------------------------------------------------- swap
+    def swap_out(self, sid: int) -> Dict[str, object]:
+        """Demote a sequence host-side: copy its KV out of the pool and release
+        every pool page. Returns the saved state for swap_in."""
+        L = int(self.lengths[sid])
+        pairs = [self.gather_kv(sid, layer, L)
+                 for layer in range(self.cfg.num_layers)]
+        self.release(sid)
+        return {"len": L, "k": [np.asarray(k) for k, _ in pairs],
+                "v": [np.asarray(v) for _, v in pairs]}
+
+    def swap_in(self, saved: Dict[str, object]) -> int:
+        """Re-admit a swapped-out sequence: allocate fresh pages and scatter the
+        saved KV back into the pool. Returns the new sid."""
+        sid = self.new_seq()
+        L = int(saved["len"])
+        self.alloc_range(sid, 0, L)
+        for layer in range(self.cfg.num_layers):
+            self.write_at(sid, layer, jnp.asarray(saved["k"][layer]),
+                          jnp.asarray(saved["v"][layer]), 0)
+        self.lengths[sid] = L
+        return sid
+
+    # ------------------------------------------------------------- umem
+    def seq_extents(self, sid: int) -> List[Tuple[int, int]]:
+        """Byte extents of the sequence's pool pages, consecutive pages
+        coalesced (the allocator is mostly sequential, so a sequence usually
+        collapses to a handful of ranges)."""
         npages = -(-int(self.lengths[sid]) // self.page_size)
         pids = np.sort(self.page_table[sid, :npages].astype(np.int64))
+        pids = pids[pids != 0]
         if len(pids) == 0:
-            return
+            return []
         splits = np.flatnonzero(np.diff(pids) != 1) + 1
         starts = pids[np.concatenate(([0], splits))]
         ends = pids[np.concatenate((splits - 1, [len(pids) - 1]))] + 1
-        reads = [(self.alloc, int(s) * self.page_bytes, int(e) * self.page_bytes)
-                 for s, e in zip(starts, ends)]
-        self.um.kernel(reads=reads, actor=Actor.GPU, name=f"kv_seq{sid}")
+        return [(int(s) * self.page_bytes, int(e) * self.page_bytes)
+                for s, e in zip(starts, ends)]
+
+    def _touch(self, sid: int) -> None:
+        if self.um is None:
+            return
+        # account page-granular access in the unified-memory runtime: batch
+        # every resident page of the sequence into ONE kernel call
+        reads = [(self.alloc, lo, hi) for lo, hi in self.seq_extents(sid)]
+        if reads:
+            self.um.kernel(reads=reads, actor=Actor.GPU, name=f"kv_seq{sid}")
 
     # ------------------------------------------------------------- views
     def batch_view(self, sids):

@@ -90,10 +90,9 @@ def test_kernel_epoch_batching_in_paged_kv_touch():
                       page_size=8, um=um)
     sid = kv.new_seq()
     kv.lengths[sid] = 40  # 5 pages
-    for j in range(5):
-        kv._page_for(sid, j * 8)
+    kv.alloc_range(sid, 0, 40)
     e0 = um.epoch
-    kv._touch(sid, 1)
+    kv._touch(sid)
     assert um.epoch == e0 + 1  # one kernel op, not one per page
     tbl = kv.alloc.table
     assert tbl.resident_bytes(Tier.DEVICE) + tbl.resident_bytes(Tier.HOST) \

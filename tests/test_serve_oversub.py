@@ -1,0 +1,167 @@
+"""Serving under memory pressure: preemption, chunked prefill, oversubscribed
+pools, and the umem demote/async-prefetch APIs the scheduler drives."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    TPU_V5E,
+    Actor,
+    Tier,
+    UnifiedMemory,
+    system_policy,
+)
+from repro.models import init_params
+from repro.models.cache import kv_head_layout
+from repro.serve import PagedKVCache, SeqState, ServeEngine
+
+KB = 1024
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("yi-6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n=5):
+    rng = np.random.default_rng(0)
+    return [rng.integers(2, cfg.vocab_size, int(rng.integers(10, 30)))
+            for _ in range(n)]
+
+
+def _run(cfg, params, prompts, max_new=10, **kw):
+    eng = ServeEngine(cfg, params, max_seqs=len(prompts), max_len=96,
+                      page_size=8, **kw)
+    for p in prompts:
+        eng.add_request(p, max_new)
+    return eng.run_to_completion(), eng
+
+
+def test_preemption_resume_matches_unconstrained(model):
+    """A pool too small for every admitted sequence forces preemption; the
+    preempt -> demote -> resume cycle must not change a single token."""
+    cfg, params = model
+    prompts = _prompts(cfg)
+    base, eng0 = _run(cfg, params, prompts)
+    assert eng0.stats.preempted == 0
+    tight, eng1 = _run(cfg, params, prompts, num_pages=10)
+    assert eng1.stats.preempted > 0 and eng1.stats.resumed > 0
+    assert all(tight[r] == base[r] for r in base)
+
+
+def test_no_page_leak_across_many_requests(model):
+    """release() returns every page: after many requests (with preemptions)
+    the free list is back to its initial size and no slot stays active."""
+    cfg, params = model
+    prompts = _prompts(cfg, n=8)
+    eng = ServeEngine(cfg, params, max_seqs=3, max_len=96, page_size=8,
+                      num_pages=10)
+    free0 = eng.cache.free_pages()
+    for p in prompts:
+        eng.add_request(p, 8)
+    eng.run_to_completion()
+    assert eng.cache.free_pages() == free0
+    assert not eng.cache.active.any()
+    assert (eng.cache.page_table == 0).all()
+    assert sorted(eng.cache._free) == list(range(1, eng.cache.num_pages))
+
+
+def test_chunked_prefill_bit_identical(model):
+    """Prefilling 4 tokens per step must generate exactly the tokens of the
+    single-shot prefill (each chunk attends over the pool-resident KV)."""
+    cfg, params = model
+    prompts = _prompts(cfg, n=3)
+    base, _ = _run(cfg, params, prompts)
+    chunked, eng = _run(cfg, params, prompts, prefill_chunk=4)
+    assert eng.stats.prefill_chunks > len(prompts)  # really ran chunked
+    assert all(chunked[r] == base[r] for r in base)
+
+
+def test_oversubscribed_pool_serves_remotely(model):
+    """Pool 1.5x the device capacity: serving completes (no pool-exhausted /
+    OOM), tokens match the in-memory run, and some KV reads go remote."""
+    cfg, params = model
+    prompts = _prompts(cfg)
+    base, eng0 = _run(cfg, params, prompts)
+    # pool sized to the workload's peak concurrent demand, then a device
+    # capacity of 2/3 of that: ~1/3 of the KV must live host-side
+    num_pages = sum(-(-(len(p) + 10) // 8) for p in prompts) + 1
+    pool_bytes = num_pages * eng0.cache.page_bytes
+    hw = dataclasses.replace(TPU_V5E, device_capacity=int(pool_bytes / 1.5))
+    um = UnifiedMemory(hw=hw)
+    over, eng1 = _run(cfg, params, prompts, num_pages=num_pages, um=um)
+    assert all(over[r] == base[r] for r in base)
+    rep = um.report()
+    assert rep["traffic_total"]["remote_h2d"] > 0  # really read host KV pages
+    assert 0 < rep["remote_access_share"] < 1
+    tbl = eng1.cache.alloc.table
+    assert tbl.resident_bytes(Tier.DEVICE) <= hw.device_capacity
+
+
+def test_admission_defers_under_device_pressure(model):
+    """With a high admit_device_fraction and a tiny device, not every request
+    is admitted in the first step — admission waits for pressure to drop."""
+    cfg, params = model
+    prompts = _prompts(cfg, n=4)
+    pb = PagedKVCache.page_bytes_for(cfg, kv_head_layout(cfg, 1), 8)
+    hw = dataclasses.replace(TPU_V5E, device_capacity=6 * pb)
+    um = UnifiedMemory(hw=hw)
+    eng = ServeEngine(cfg, params, max_seqs=4, max_len=96, page_size=8,
+                      um=um, admit_device_fraction=1.0)
+    for p in prompts:
+        eng.add_request(p, 8)
+    eng.step()
+    states = [r.state for r in eng.requests.values()]
+    assert SeqState.PENDING in states  # pressure gate deferred someone
+    out = eng.run_to_completion()
+    assert all(len(out[r.rid]) == 8 for r in eng.requests.values())
+
+
+def test_umem_demote_moves_device_pages_host():
+    um = UnifiedMemory()
+    a = um.alloc("x", 512 * KB, system_policy(page_size=64 * KB))
+    um.kernel(reads=[(a, 0, 512 * KB)], actor=Actor.GPU)  # first-touch: device
+    assert a.table.resident_bytes(Tier.DEVICE) == 512 * KB
+    d2h0 = um.prof.report()["traffic_total"]["link_d2h"]
+    um.demote(a, 0, 256 * KB)
+    assert a.table.resident_bytes(Tier.DEVICE) == 256 * KB
+    assert a.table.resident_bytes(Tier.HOST) == 256 * KB
+    assert um.prof.report()["traffic_total"]["link_d2h"] == d2h0 + 256 * KB
+    # demoting an untouched (unmapped) range is a no-op
+    b = um.alloc("y", 128 * KB, system_policy(page_size=64 * KB))
+    um.demote(b, 0, 128 * KB)
+    assert b.table.resident_pages(Tier.UNMAPPED) == b.table.num_pages
+
+
+def test_umem_demote_drops_pending_notifications():
+    """demote() cold-marks the range: pending counter notifications must be
+    dropped so the next sync() doesn't promote the pages straight back."""
+    um = UnifiedMemory()
+    a = um.alloc("x", 128 * KB, system_policy(page_size=64 * KB, threshold=1))
+    um.kernel(reads=[(a, 0, 128 * KB)], actor=Actor.CPU)  # host-resident
+    um.kernel(reads=[(a, 0, 128 * KB)], actor=Actor.GPU)  # remote: pending
+    assert a.pending_count == a.table.num_pages
+    um.demote(a, 0, 128 * KB)
+    assert a.pending_count == 0 and not a.pending.any()
+    um.sync()
+    assert a.table.resident_bytes(Tier.DEVICE) == 0  # nothing migrated back
+
+
+def test_umem_prefetch_async_overlaps_next_kernel():
+    um = UnifiedMemory()
+    a = um.alloc("x", 256 * KB, system_policy(page_size=64 * KB))
+    um.kernel(reads=[(a, 0, 256 * KB)], actor=Actor.CPU)  # host-resident
+    hidden = um.prefetch_async([(a, 0, 128 * KB), (a, 128 * KB, 256 * KB)])
+    assert hidden > 0
+    assert um._pending_overlap == pytest.approx(hidden)
+    assert a.table.resident_bytes(Tier.DEVICE) == 256 * KB
+    t0 = um.clock
+    um.kernel(reads=[(a, 0, 64 * KB)], actor=Actor.GPU)
+    # the kernel charge absorbed the prefetch: charged max(kernel, prefetch)
+    assert um.clock - t0 >= hidden
+    assert um._pending_overlap == 0.0

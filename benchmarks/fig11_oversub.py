@@ -1,25 +1,21 @@
-"""Fig. 11: system-vs-managed speedup at increasing memory oversubscription."""
-from repro.apps import APP_RUNNERS
+"""Fig. 11: system-vs-managed speedup at increasing memory oversubscription.
+
+Sizes come from each app's AppSpec "fig11" preset — the same configurations
+scripts/check_parity.py pins bit-identical across refactors."""
+from repro.apps import APPS
 
 from benchmarks.common import emit
 
-SIZES = {
-    "qiskit": dict(n_qubits=16, depth=2),
-    "needle": dict(n=1024),
-    "pathfinder": dict(rows=2048, cols=512),
-    "bfs": dict(n_nodes=1 << 14),
-    "hotspot": dict(rows=1024, cols=1024, iters=6),
-    "srad": dict(rows=512, cols=512, iters=8),
-}
 KB = 1024
 
 
 def run():
-    for app, kw in SIZES.items():
+    for app, spec in APPS.items():
+        kw = spec.sizes["fig11"]
         for ratio in (1.2, 1.5, 2.0, 3.0):
-            ts = APP_RUNNERS[app]("system", oversub_ratio=ratio,
-                                  page_size=4 * KB, **kw).time_excluding_cpu_init()
-            tm = APP_RUNNERS[app]("managed", oversub_ratio=ratio,
-                                  page_size=4 * KB, **kw).time_excluding_cpu_init()
+            ts = spec.run("system", oversub_ratio=ratio,
+                          page_size=4 * KB, **kw).time_excluding_cpu_init()
+            tm = spec.run("managed", oversub_ratio=ratio,
+                          page_size=4 * KB, **kw).time_excluding_cpu_init()
             emit(f"fig11/{app}/oversub{ratio}", ts * 1e6,
                  f"system_over_managed_speedup={tm/ts:.2f}")

@@ -1,21 +1,16 @@
-"""Fig. 3: relative performance of system/managed vs explicit, six apps."""
-from repro.apps import APP_RUNNERS
+"""Fig. 3: relative performance of system/managed vs explicit, six apps.
+
+Sizes come from each app's AppSpec "fig3" preset — the same configurations
+scripts/check_parity.py pins bit-identical across refactors."""
+from repro.apps import APPS
 
 from benchmarks.common import emit
 
-SIZES = {
-    "qiskit": dict(n_qubits=16, depth=3),
-    "needle": dict(n=1024),
-    "pathfinder": dict(rows=2048, cols=512),
-    "bfs": dict(n_nodes=1 << 14),
-    "hotspot": dict(rows=1024, cols=1024, iters=8),
-    "srad": dict(rows=512, cols=512, iters=12),
-}
-
 
 def run():
-    for app, kw in SIZES.items():
-        base = APP_RUNNERS[app]("explicit", **kw).time_excluding_cpu_init()
+    for app, spec in APPS.items():
+        kw = spec.sizes["fig3"]
+        base = spec.run("explicit", **kw).time_excluding_cpu_init()
         for pol in ("managed", "system"):
-            t = APP_RUNNERS[app](pol, **kw).time_excluding_cpu_init()
+            t = spec.run(pol, **kw).time_excluding_cpu_init()
             emit(f"fig3/{app}/{pol}", t * 1e6, f"speedup_vs_explicit={base / t:.3f}")

@@ -1,23 +1,22 @@
-"""Fig. 6/7: system page size (4KB vs 64KB): alloc/dealloc and compute time."""
-from repro.apps import APP_RUNNERS
+"""Fig. 6/7: system page size (4KB vs 64KB): alloc/dealloc and compute time.
+
+Sizes come from the AppSpec "fig3" presets (qsim has its own page-size
+study in fig89_qiskit.py and is skipped here, as in the paper)."""
+from repro.apps import APPS
 
 from benchmarks.common import emit
 
 KB = 1024
-SIZES = {
-    "needle": dict(n=1024),
-    "pathfinder": dict(rows=2048, cols=512),
-    "bfs": dict(n_nodes=1 << 14),
-    "hotspot": dict(rows=1024, cols=1024, iters=8),
-    "srad": dict(rows=512, cols=512, iters=12),
-}
 
 
 def run():
-    for app, kw in SIZES.items():
+    for app, spec in APPS.items():
+        if app == "qiskit":
+            continue
+        kw = spec.sizes["fig3"]
         res = {}
         for ps in (4 * KB, 64 * KB):
-            r = APP_RUNNERS[app]("system", page_size=ps, **kw)
+            r = spec.run("system", page_size=ps, **kw)
             res[ps] = r
             ad = r.phase_times.get("alloc", 0) + r.phase_times.get("dealloc", 0)
             emit(f"fig6/{app}/page{ps//KB}K", ad * 1e6,

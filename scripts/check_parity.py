@@ -1,0 +1,123 @@
+"""Golden charge-parity harness: the 66 fig3/fig11 configurations must stay
+bit-identical across refactors of the memory runtime and the app front-end.
+
+Runs every fig3 config (6 apps x explicit/managed/system at the AppSpec
+"fig3" sizes) and every fig11 config (6 apps x 4 oversubscription ratios x
+system/managed at 4 KB pages), snapshots *full-precision* phase times
+(float hex) and per-phase + total traffic counters, and diffs them against
+the committed fixture. Any modeled-charge drift — a reordered float
+accumulation, a changed extent, a different eviction decision — fails with
+the exact counters that moved.
+
+    PYTHONPATH=src python scripts/check_parity.py            # verify (CI)
+    PYTHONPATH=src python scripts/check_parity.py --write    # regenerate
+    PYTHONPATH=src python scripts/check_parity.py --only fig3/hotspot
+
+The fixture lives at tests/fixtures/parity.json; tests/test_parity.py pins
+a representative subset in tier-1. Regenerating the fixture is a deliberate
+act — only do it when a charge-model change is intended, and say so in the
+commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.apps import APPS, charge_snapshot  # noqa: E402
+
+KB = 1024
+FIXTURE = Path(__file__).resolve().parent.parent / "tests" / "fixtures" / "parity.json"
+
+FIG11_RATIOS = (1.2, 1.5, 2.0, 3.0)
+
+
+def configs():
+    """Yield (key, app_name, policy, kwargs) for all 66 parity configs."""
+    for name, spec in APPS.items():
+        for pol in ("explicit", "managed", "system"):
+            yield f"fig3/{name}/{pol}", name, pol, dict(spec.sizes["fig3"])
+    for name, spec in APPS.items():
+        for ratio in FIG11_RATIOS:
+            for pol in ("system", "managed"):
+                yield (f"fig11/{name}/oversub{ratio}/{pol}", name, pol,
+                       dict(spec.sizes["fig11"],
+                            oversub_ratio=ratio, page_size=4 * KB))
+
+
+def run_config(name: str, pol: str, kw: dict) -> dict:
+    return charge_snapshot(APPS[name].run(pol, **kw))
+
+
+def diff(key: str, got: dict, want: dict) -> list:
+    lines = []
+    for section in sorted(set(got) | set(want)):
+        g, w = got.get(section, {}), want.get(section, {})
+        if g == w:
+            continue
+        for k in sorted(set(g) | set(w)):
+            if g.get(k) != w.get(k):
+                lines.append(f"  {key} {section}.{k}: got={g.get(k)!r} "
+                             f"want={w.get(k)!r}")
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the fixture instead of verifying")
+    ap.add_argument("--only", default="",
+                    help="only run configs whose key starts with this prefix")
+    args = ap.parse_args()
+
+    todo = [(k, n, p, kw) for k, n, p, kw in configs()
+            if k.startswith(args.only)]
+    if not todo:
+        print(f"check_parity: no configs match prefix {args.only!r}",
+              file=sys.stderr)
+        return 2
+
+    fixture = {}
+    if not args.write:
+        if not FIXTURE.exists():
+            print(f"check_parity: missing fixture {FIXTURE} "
+                  "(run with --write first)", file=sys.stderr)
+            return 2
+        fixture = json.loads(FIXTURE.read_text())
+
+    t0 = time.time()
+    out, broken = {}, []
+    for key, name, pol, kw in todo:
+        snap = run_config(name, pol, kw)
+        out[key] = snap
+        if not args.write:
+            if key not in fixture:
+                broken.append(f"  {key}: not in fixture (regenerate?)")
+            else:
+                broken.extend(diff(key, snap, fixture[key]))
+
+    if args.write:
+        if args.only:
+            merged = json.loads(FIXTURE.read_text()) if FIXTURE.exists() else {}
+            merged.update(out)
+            out = merged
+        FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+        FIXTURE.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
+        print(f"check_parity: wrote {len(out)} configs to "
+              f"{FIXTURE} in {time.time() - t0:.1f}s")
+        return 0
+
+    status = "BIT-IDENTICAL" if not broken else "DRIFTED"
+    print(f"check_parity: {len(todo)} configs in {time.time() - t0:.1f}s "
+          f"-> {status}")
+    for line in broken:
+        print(line, file=sys.stderr)
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,39 @@
-"""The paper's six applications (Table 2), each in explicit/managed/system versions."""
+"""The paper's six applications (Table 2), each in explicit/managed/system
+versions behind one buffer-centric code path.
+
+``APPS`` is the AppSpec registry — the single source of truth for the
+uniform runners and the canonical per-figure size presets that
+benchmarks/fig3_overview.py, fig11_oversub.py, fig67_pagesize.py,
+scripts/check_parity.py and tests/test_apps.py consume. ``run_app`` is the
+uniform entry point; ``APP_RUNNERS`` is the legacy name->runner mapping.
+"""
+from repro.apps import bfs as _bfs
+from repro.apps import hotspot as _hotspot
+from repro.apps import needle as _needle
+from repro.apps import pathfinder as _pathfinder
+from repro.apps import qsim as _qsim
+from repro.apps import srad as _srad
 from repro.apps.bfs import run_bfs  # noqa: F401
-from repro.apps.common import AppResult  # noqa: F401
+from repro.apps.common import AppResult, AppSpec, charge_snapshot  # noqa: F401
 from repro.apps.hotspot import run_hotspot  # noqa: F401
 from repro.apps.needle import run_needle  # noqa: F401
 from repro.apps.pathfinder import run_pathfinder  # noqa: F401
 from repro.apps.qsim import run_qsim  # noqa: F401
 from repro.apps.srad import run_srad  # noqa: F401
 
-APP_RUNNERS = {
-    "qiskit": run_qsim,
-    "needle": run_needle,
-    "pathfinder": run_pathfinder,
-    "bfs": run_bfs,
-    "hotspot": run_hotspot,
-    "srad": run_srad,
-}
+# canonical (paper Table 2) ordering — benchmarks emit rows in this order
+APPS = {spec.name: spec for spec in (
+    _qsim.SPEC, _needle.SPEC, _pathfinder.SPEC,
+    _bfs.SPEC, _hotspot.SPEC, _srad.SPEC)}
+
+APP_RUNNERS = {name: spec.run for name, spec in APPS.items()}
+
+
+def run_app(name: str, policy_kind: str = "system", *,
+            preset: str = None, **overrides) -> AppResult:
+    """Uniform runner: look up the app's spec, apply a named size preset
+    ("fig3" | "fig11" | "small") if given, then any keyword overrides."""
+    spec = APPS[name]
+    kw = dict(spec.sizes[preset]) if preset is not None else {}
+    kw.update(overrides)
+    return spec.run(policy_kind, **kw)

@@ -1,16 +1,24 @@
 """BFS: level-synchronous breadth-first search on a CSR graph (Rodinia).
 
 Mixed access pattern, CPU-init (graph construction). Frontier expansion
-touches scattered col_idx ranges — modeled as per-level partial-range reads.
+touches scattered col_idx ranges — by default modeled as a per-level
+partial-range read sized by a hand-estimated frontier fraction (the paper's
+coarse model). With ``sparse_access=True`` the level kernels instead read
+exactly the ``col_idx`` extents the frontier's adjacency gathers touch
+(page-coalesced ``buf[...]`` slices) — fine-granularity partial access as a
+first-class buffer expression. Off by default so the default-config charges
+stay bit-identical to the coarse model.
 """
 from __future__ import annotations
+
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
-from repro.core import Actor
+from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
+from repro.core import Actor, UMBuffer, coalesce_runs
 
 
 def _random_graph(n_nodes: int, deg: int, seed: int = 0):
@@ -20,13 +28,21 @@ def _random_graph(n_nodes: int, deg: int, seed: int = 0):
     return jnp.asarray(row_ptr), jnp.asarray(cols)
 
 
-def _bfs_levels(row_ptr, cols, n_nodes: int, deg: int, src: int = 0, max_levels: int = 32):
-    """Returns (levels array, per-level frontier sizes)."""
+def _bfs_levels(row_ptr, cols, n_nodes: int, deg: int, src: int = 0,
+                max_levels: int = 32, collect_frontiers: bool = False):
+    """Returns (levels array, per-level frontier sizes[, expanded frontiers]).
+
+    With collect_frontiers=True also returns, for each modeled level kernel,
+    the node ids whose adjacency lists that kernel gathers (the frontier
+    *being expanded*, driving sparse_access extent resolution)."""
     level = jnp.full((n_nodes,), -1, jnp.int32).at[src].set(0)
     frontier = jnp.zeros((n_nodes,), bool).at[src].set(True)
     sizes = []
+    fronts: List[np.ndarray] = []
     neigh = cols.reshape(n_nodes, deg)
     for lv in range(1, max_levels):
+        expanding = (np.flatnonzero(np.asarray(frontier))
+                     if collect_frontiers else None)
         # neighbors of frontier nodes
         mask = frontier[:, None]
         touched = jnp.zeros((n_nodes,), bool).at[
@@ -36,13 +52,42 @@ def _bfs_levels(row_ptr, cols, n_nodes: int, deg: int, src: int = 0, max_levels:
             break
         level = jnp.where(new, lv, level)
         sizes.append(int(new.sum()))
+        if collect_frontiers:
+            fronts.append(expanding)
         frontier = new
+    if collect_frontiers:
+        return level, sizes, fronts
     return level, sizes
+
+
+def _frontier_views(edges: UMBuffer, nodes: np.ndarray, deg: int,
+                    page_size: int):
+    """The col_idx extents a frontier gather touches, as buffer slices.
+
+    Each frontier node v reads its adjacency block — elements
+    [v*deg, (v+1)*deg) — so the touched element set is the union of those
+    blocks, coalesced to page granularity (pages are what the memory system
+    moves/charges) and merged into maximal runs. Node runs are coalesced
+    *before* the page conversion so a block spanning many pages contributes
+    its full page range, interior pages included."""
+    if len(nodes) == 0:
+        return []
+    per_page = max(1, page_size // edges.itemsize)
+    views = []
+    for v0, v1 in coalesce_runs(np.unique(nodes)):
+        p0 = (v0 * deg) // per_page
+        p1 = (v1 * deg - 1) // per_page + 1
+        if views and p0 <= views[-1][1]:  # touches/overlaps the previous run
+            views[-1][1] = max(views[-1][1], p1)
+        else:
+            views.append([p0, p1])
+    return [edges[s * per_page:e * per_page] for s, e in views]
 
 
 def run_bfs(policy_kind: str = "system", *, n_nodes: int = 1 << 16, deg: int = 8,
             page_size: int = 64 * KB, oversub_ratio: float = 0.0,
-            auto_migrate: bool = True, interpret: bool = True) -> AppResult:
+            auto_migrate: bool = True, sparse_access: bool = False,
+            interpret: bool = True) -> AppResult:
     edge_bytes = n_nodes * deg * 4
     node_bytes = n_nodes * 4
     um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
@@ -50,46 +95,49 @@ def run_bfs(policy_kind: str = "system", *, n_nodes: int = 1 << 16, deg: int = 8
                       auto_migrate=auto_migrate)
 
     with um.phase("alloc"):
-        if policy_kind == "explicit":
-            edges_d, edges_h = explicit_pair(um, "col_idx", edge_bytes)
-            rowp_d, rowp_h = explicit_pair(um, "row_ptr", node_bytes)
-        else:
-            edges_d = um.alloc("col_idx", edge_bytes, pol)
-            rowp_d = um.alloc("row_ptr", node_bytes, pol)
-        cost_d = um.alloc("cost", node_bytes, pol)
+        edges = um.from_host("col_idx", (n_nodes * deg,), jnp.int32, pol)
+        rowp = um.from_host("row_ptr", (n_nodes,), jnp.int32, pol)
+        cost = um.array("cost", (n_nodes,), jnp.int32, pol)
 
     with um.phase("cpu_init"):
         row_ptr, cols = _random_graph(n_nodes, deg)
-        tg = [edges_h, rowp_h] if policy_kind == "explicit" else [edges_d, rowp_d]
-        um.kernel(writes=[(t, 0, t.nbytes) for t in tg], actor=Actor.CPU, name="build")
+        um.launch("build", writes=[edges[:], rowp[:]], actor=Actor.CPU)
 
-    if policy_kind == "explicit":
-        with um.phase("h2d"):
-            um.copy(edges_d, 0, edge_bytes, "h2d")
-            um.copy(rowp_d, 0, node_bytes, "h2d")
-
-    with um.phase("compute"):
-        level, sizes = _bfs_levels(row_ptr, cols, n_nodes, deg)
-        total = max(1, n_nodes)
-        for lv, fsize in enumerate(sizes):
-            # frontier covers fsize/n of nodes; edges touched ~ fsize*deg
-            frac = min(1.0, fsize * 4.0 / total)  # scattered pages touched
-            hi = max(4096, int(frac * edge_bytes) // 4096 * 4096)
-            um.kernel(
-                reads=[(edges_d, 0, min(hi, edge_bytes)), (rowp_d, 0, node_bytes)],
-                writes=[(cost_d, 0, node_bytes)],
-                flops=2.0 * fsize * deg, actor=Actor.GPU, name=f"level{lv}")
-            um.sync()
-
-    if policy_kind == "explicit":
-        with um.phase("d2h"):
-            um.copy(cost_d, 0, node_bytes, "d2h")
+    fronts: List[np.ndarray] = []
+    with um.staged(h2d=[edges, rowp], d2h=[cost]):
+        with um.phase("compute"):
+            if sparse_access:
+                level, sizes, fronts = _bfs_levels(
+                    row_ptr, cols, n_nodes, deg, collect_frontiers=True)
+            else:
+                level, sizes = _bfs_levels(row_ptr, cols, n_nodes, deg)
+            total = max(1, n_nodes)
+            for lv, fsize in enumerate(sizes):
+                if sparse_access:
+                    # exactly the adjacency extents this level gathers
+                    reads = _frontier_views(edges, fronts[lv], deg,
+                                            pol.page_size)
+                else:
+                    # frontier covers fsize/n of nodes: estimate the touched
+                    # fraction of the whole edge array (scattered pages)
+                    frac = min(1.0, fsize * 4.0 / total)
+                    hi = max(4096, int(frac * edge_bytes) // 4096 * 4096)
+                    reads = [edges.byterange(0, min(hi, edge_bytes))]
+                um.launch(f"level{lv}", reads=reads + [rowp[:]],
+                          writes=[cost[:]],
+                          flops=2.0 * fsize * deg, actor=Actor.GPU)
+                um.sync()
 
     with um.phase("dealloc"):
-        for a in list(um.allocs.values()):
-            if not a.freed and a.name != "__ballast__":
-                um.free(a)
+        um.free_live()
 
     visited = int((level >= 0).sum())
     return finish(um, "bfs", policy_kind, page_size, float(visited),
-                  n_nodes=n_nodes, levels=len(sizes))
+                  n_nodes=n_nodes, levels=len(sizes), sparse=sparse_access)
+
+
+SPEC = AppSpec(
+    name="bfs", run=run_bfs, init_actor="cpu",
+    sizes={"fig3": dict(n_nodes=1 << 14),
+           "fig11": dict(n_nodes=1 << 14),
+           "small": dict(n_nodes=1 << 12)})

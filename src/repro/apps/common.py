@@ -1,19 +1,31 @@
-"""Shared app harness: policy factories, phases, ballast oversubscription.
+"""Shared app harness: the AppSpec registry, policy factories, phases,
+ballast oversubscription, charge fingerprints.
 
 Every app follows the paper's Fig. 2 structure:
     alloc -> init (CPU- or GPU-side first touch) -> compute -> dealloc
 in one of three memory-management versions: 'explicit' (original
 cudaMalloc+memcpy), 'managed' (cudaMallocManaged), 'system' (malloc).
 
+Apps are *buffer-centric*: they allocate typed UMBuffers via
+``um.array``/``um.from_host``, launch tracked kernels over buffer slices
+via ``um.launch``, and wrap their compute region in ``um.staged(...)``,
+which charges the explicit version's h2d/d2h copies at the phase
+boundaries. No app hand-writes ``(alloc, lo, hi)`` byte ranges or branches
+on the policy kind for staging — the memory model follows the buffers.
+
 The math is real JAX executed on CPU; the *memory system* (placement,
 faults, counters, migrations, traffic, modeled time) is the UnifiedMemory
 runtime. Oversubscription uses the paper's own methodology (§3.2): a ballast
 explicit allocation shrinks free device memory to hit a target ratio.
+
+Each app module exports an :class:`AppSpec` (uniform runner + per-figure
+size presets); ``repro.apps.APPS`` is the registry the benchmarks, the
+parity harness (scripts/check_parity.py) and the tests consume.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Callable, Dict, Mapping
 
 from repro.core import (
     GRACE_HOPPER,
@@ -48,6 +60,22 @@ class AppResult:
         return sum(v for k, v in self.phase_times.items() if k != "cpu_init")
 
 
+@dataclass(frozen=True)
+class AppSpec:
+    """One paper app: a uniform runner plus its per-figure size presets.
+
+    ``run(policy_kind, **kw)`` is the single entry point for every
+    memory-management version; ``sizes`` holds the canonical keyword presets
+    ("fig3", "fig11", "small") that benchmarks/fig3_overview.py,
+    fig11_oversub.py, fig67_pagesize.py, the charge-parity harness and
+    tests/test_apps.py all share — one source of truth for the 66
+    parity-pinned configurations."""
+    name: str
+    run: Callable[..., AppResult]
+    init_actor: str  # "cpu" | "gpu": who first-touches the data (Fig. 3 class)
+    sizes: Mapping[str, Mapping[str, object]]
+
+
 def make_um(policy_kind: str, *, page_size: int = 64 * KB,
             hw: HardwareModel = GRACE_HOPPER, auto_migrate: bool = True,
             oversub_ratio: float = 0.0, app_peak_bytes: int = 0,
@@ -56,8 +84,11 @@ def make_um(policy_kind: str, *, page_size: int = 64 * KB,
 
     oversub_ratio R > 1 shrinks free device memory so that
     app_peak_bytes / free == R (the paper's simulated oversubscription).
+    The runtime's staging page size follows the app's system page size, so
+    explicit-version host staging buffers (um.from_host) are paged like the
+    system-memory version instead of at a hard-wired 64 KB default.
     """
-    um = UnifiedMemory(hw=hw)
+    um = UnifiedMemory(hw=hw, staging_page_size=page_size)
     if oversub_ratio and oversub_ratio > 1.0:
         assert app_peak_bytes > 0
         target_free = int(app_peak_bytes / oversub_ratio)
@@ -75,13 +106,6 @@ def make_um(policy_kind: str, *, page_size: int = 64 * KB,
     return um, pol
 
 
-def explicit_pair(um: UnifiedMemory, name: str, nbytes: int):
-    """Explicit version: a host staging buffer + a device buffer."""
-    dev = um.alloc(name, nbytes, explicit_policy())
-    host = um.alloc(name + "__host", nbytes, system_policy(auto_migrate=False))
-    return dev, host
-
-
 def finish(um: UnifiedMemory, name: str, policy_kind: str, page_size: int,
            checksum: float, **extra) -> AppResult:
     rep = um.report()
@@ -94,3 +118,19 @@ def finish(um: UnifiedMemory, name: str, policy_kind: str, page_size: int,
         report=rep,
         extra=extra,
     )
+
+
+def charge_snapshot(r: AppResult) -> Dict[str, object]:
+    """Full-precision charge fingerprint of one app run.
+
+    Phase times are serialized as float hex (bit-exact round trip), traffic
+    counters as ints — this is what scripts/check_parity.py diffs against
+    tests/fixtures/parity.json and what tests/test_parity.py pins in tier-1.
+    """
+    rep = r.report
+    return {
+        "phase_times": {k: float(v).hex() for k, v in sorted(r.phase_times.items())},
+        "traffic_total": {k: int(v) for k, v in sorted(rep["traffic_total"].items())},
+        "traffic_phases": {ph: {k: int(v) for k, v in sorted(tr.items())}
+                           for ph, tr in sorted(rep["traffic"].items())},
+    }

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
+from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
 from repro.core import Actor
 from repro.kernels.stencil5 import stencil5
 
@@ -24,49 +24,36 @@ def run_hotspot(policy_kind: str = "system", *, rows: int = 1024, cols: int = 10
                       app_peak_bytes=3 * nbytes, auto_migrate=auto_migrate)
 
     with um.phase("alloc"):
-        if policy_kind == "explicit":
-            temp_d, temp_h = explicit_pair(um, "temp", nbytes)
-            power_d, power_h = explicit_pair(um, "power", nbytes)
-            out_d = um.alloc("temp_out", nbytes, pol)  # GPU-only scratch
-        else:
-            temp_d = um.alloc("temp", nbytes, pol)
-            power_d = um.alloc("power", nbytes, pol)
-            out_d = um.alloc("temp_out", nbytes, pol)
+        temp_m = um.from_host("temp", (rows, cols), jnp.float32, pol)
+        power_m = um.from_host("power", (rows, cols), jnp.float32, pol)
+        out_m = um.array("temp_out", (rows, cols), jnp.float32, pol)  # GPU scratch
 
     key = jax.random.PRNGKey(0)
     with um.phase("cpu_init"):
         temp = 300.0 + 50.0 * jax.random.uniform(key, (rows, cols), jnp.float32)
         power = jax.random.uniform(jax.random.PRNGKey(1), (rows, cols), jnp.float32)
-        if policy_kind == "explicit":
-            um.kernel(writes=[(temp_h, 0, nbytes), (power_h, 0, nbytes)],
-                      actor=Actor.CPU, name="init")
-        else:
-            um.kernel(writes=[(temp_d, 0, nbytes), (power_d, 0, nbytes)],
-                      actor=Actor.CPU, name="init")
+        um.launch("init", writes=[temp_m[:], power_m[:]], actor=Actor.CPU)
 
-    if policy_kind == "explicit":
-        with um.phase("h2d"):
-            um.copy(temp_d, 0, nbytes, "h2d")
-            um.copy(power_d, 0, nbytes, "h2d")
-
-    with um.phase("compute"):
-        src, dst = temp_d, out_d
-        for it in range(iters):
-            temp = stencil5(temp, COEFF, interpret=interpret) + 0.001 * power
-            um.kernel(reads=[(src, 0, nbytes), (power_d, 0, nbytes)],
-                      writes=[(dst, 0, nbytes)],
-                      flops=7.0 * rows * cols, actor=Actor.GPU, name=f"sweep{it}")
-            um.sync()
-            src, dst = dst, src
-
-    if policy_kind == "explicit":
-        with um.phase("d2h"):
-            um.copy(temp_d, 0, nbytes, "d2h")
+    with um.staged(h2d=[temp_m, power_m], d2h=[temp_m]):
+        with um.phase("compute"):
+            src, dst = temp_m, out_m
+            for it in range(iters):
+                temp = stencil5(temp, COEFF, interpret=interpret) + 0.001 * power
+                um.launch(f"sweep{it}", reads=[src[:], power_m[:]],
+                          writes=[dst[:]],
+                          flops=7.0 * rows * cols, actor=Actor.GPU)
+                um.sync()
+                src, dst = dst, src
 
     with um.phase("dealloc"):
-        for a in list(um.allocs.values()):
-            if not a.freed and a.name != "__ballast__":
-                um.free(a)
+        um.free_live()
 
     return finish(um, "hotspot", policy_kind, page_size, float(jnp.mean(temp)),
                   iters=iters, rows=rows, cols=cols)
+
+
+SPEC = AppSpec(
+    name="hotspot", run=run_hotspot, init_actor="cpu",
+    sizes={"fig3": dict(rows=1024, cols=1024, iters=8),
+           "fig11": dict(rows=1024, cols=1024, iters=6),
+           "small": dict(rows=256, cols=256, iters=6)})

@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
+from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
 from repro.core import Actor
 
 
@@ -40,50 +40,41 @@ def run_needle(policy_kind: str = "system", *, n: int = 2048, penalty: int = 1,
                       app_peak_bytes=2 * nbytes, auto_migrate=auto_migrate)
 
     with um.phase("alloc"):
-        if policy_kind == "explicit":
-            ref_d, ref_h = explicit_pair(um, "reference", nbytes)
-            mat_d, mat_h = explicit_pair(um, "matrix", nbytes)
-        else:
-            ref_d = um.alloc("reference", nbytes, pol)
-            mat_d = um.alloc("matrix", nbytes, pol)
+        ref = um.from_host("reference", (n, n), jnp.int32, pol)
+        mat = um.from_host("matrix", (n, n), jnp.int32, pol)
 
     key = jax.random.PRNGKey(11)
     with um.phase("cpu_init"):
         sim = jax.random.randint(key, (n, n), -2, 3, jnp.int32)
-        tgts = [ref_h, mat_h] if policy_kind == "explicit" else [ref_d, mat_d]
-        um.kernel(writes=[(t, 0, nbytes) for t in tgts], actor=Actor.CPU, name="init")
+        um.launch("init", writes=[ref[:], mat[:]], actor=Actor.CPU)
 
-    if policy_kind == "explicit":
-        with um.phase("h2d"):
-            um.copy(ref_d, 0, nbytes, "h2d")
-            um.copy(mat_d, 0, nbytes, "h2d")
-
-    with um.phase("compute"):
-        last_row = _nw_rows(sim, penalty)
-        # wavefront sweeps touch growing/shrinking diagonal bands: model as
-        # strided sub-range kernels (irregular pattern)
-        waves = 2 * n - 1
-        rows_per_wave = max(1, n // 64)
-        for w0 in range(0, waves, waves_per_kernel):
-            w1 = min(w0 + waves_per_kernel, waves)
-            frac0, frac1 = w0 / waves, w1 / waves
-            lo = int(frac0 * nbytes) // 4096 * 4096
-            hi = max(lo + 4096, int(frac1 * nbytes) // 4096 * 4096)
-            hi = min(hi, nbytes)
-            um.kernel(
-                reads=[(ref_d, lo, hi), (mat_d, lo, hi)],
-                writes=[(mat_d, lo, hi)],
-                flops=10.0 * (hi - lo) / 4, actor=Actor.GPU, name=f"wave{w0}")
-            um.sync()
-
-    if policy_kind == "explicit":
-        with um.phase("d2h"):
-            um.copy(mat_d, 0, nbytes, "d2h")
+    with um.staged(h2d=[ref, mat], d2h=[mat]):
+        with um.phase("compute"):
+            last_row = _nw_rows(sim, penalty)
+            # wavefront sweeps touch growing/shrinking diagonal bands: model as
+            # strided sub-range kernels (irregular pattern)
+            waves = 2 * n - 1
+            for w0 in range(0, waves, waves_per_kernel):
+                w1 = min(w0 + waves_per_kernel, waves)
+                frac0, frac1 = w0 / waves, w1 / waves
+                lo = int(frac0 * nbytes) // 4096 * 4096
+                hi = max(lo + 4096, int(frac1 * nbytes) // 4096 * 4096)
+                hi = min(hi, nbytes)
+                um.launch(f"wave{w0}",
+                          reads=[ref.byterange(lo, hi), mat.byterange(lo, hi)],
+                          writes=[mat.byterange(lo, hi)],
+                          flops=10.0 * (hi - lo) / 4, actor=Actor.GPU)
+                um.sync()
 
     with um.phase("dealloc"):
-        for a in list(um.allocs.values()):
-            if not a.freed and a.name != "__ballast__":
-                um.free(a)
+        um.free_live()
 
     return finish(um, "needle", policy_kind, page_size,
                   float(last_row[-1]), n=n)
+
+
+SPEC = AppSpec(
+    name="needle", run=run_needle, init_actor="cpu",
+    sizes={"fig3": dict(n=1024),
+           "fig11": dict(n=1024),
+           "small": dict(n=512)})

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.apps.common import KB, AppResult, explicit_pair, finish, make_um
+from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
 from repro.core import Actor
 
 
@@ -25,50 +25,41 @@ def run_pathfinder(policy_kind: str = "system", *, rows: int = 4096, cols: int =
                    page_size: int = 64 * KB, rows_per_kernel: int = 512,
                    oversub_ratio: float = 0.0, auto_migrate: bool = True,
                    interpret: bool = True) -> AppResult:
-    nbytes = rows * cols * 4
     row_bytes = cols * 4
     um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
-                      app_peak_bytes=nbytes + 2 * row_bytes,
+                      app_peak_bytes=rows * row_bytes + 2 * row_bytes,
                       auto_migrate=auto_migrate)
 
     with um.phase("alloc"):
-        if policy_kind == "explicit":
-            data_d, data_h = explicit_pair(um, "wall", nbytes)
-        else:
-            data_d = um.alloc("wall", nbytes, pol)
-        res_d = um.alloc("result", 2 * row_bytes, pol)
+        wall = um.from_host("wall", (rows, cols), jnp.int32, pol)
+        res = um.array("result", (2, cols), jnp.int32, pol)  # prev/cur row pair
 
     key = jax.random.PRNGKey(3)
     with um.phase("cpu_init"):
         data = jax.random.randint(key, (rows, cols), 0, 10, jnp.int32)
-        tgt = data_h if policy_kind == "explicit" else data_d
-        um.kernel(writes=[(tgt, 0, nbytes)], actor=Actor.CPU, name="init")
+        um.launch("init", writes=[wall[:]], actor=Actor.CPU)
 
-    if policy_kind == "explicit":
-        with um.phase("h2d"):
-            um.copy(data_d, 0, nbytes, "h2d")
-
-    with um.phase("compute"):
-        result = _dp_all_rows(data)
-        # model the row-sweep: one kernel per block of rows, streaming the wall
-        for r0 in range(0, rows, rows_per_kernel):
-            r1 = min(r0 + rows_per_kernel, rows)
-            um.kernel(
-                reads=[(data_d, r0 * row_bytes, r1 * row_bytes),
-                       (res_d, 0, row_bytes)],
-                writes=[(res_d, row_bytes, 2 * row_bytes)],
-                flops=5.0 * (r1 - r0) * cols, actor=Actor.GPU,
-                name=f"rows{r0}")
-            um.sync()
-
-    if policy_kind == "explicit":
-        with um.phase("d2h"):
-            um.copy(res_d, 0, row_bytes, "d2h")
+    with um.staged(h2d=[wall], d2h=[res.rows(0, 1)]):
+        with um.phase("compute"):
+            result = _dp_all_rows(data)
+            # model the row-sweep: one kernel per block of rows, streaming the wall
+            for r0 in range(0, rows, rows_per_kernel):
+                r1 = min(r0 + rows_per_kernel, rows)
+                um.launch(f"rows{r0}",
+                          reads=[wall.rows(r0, r1), res.rows(0, 1)],
+                          writes=[res.rows(1, 2)],
+                          flops=5.0 * (r1 - r0) * cols, actor=Actor.GPU)
+                um.sync()
 
     with um.phase("dealloc"):
-        for a in list(um.allocs.values()):
-            if not a.freed and a.name != "__ballast__":
-                um.free(a)
+        um.free_live()
 
     return finish(um, "pathfinder", policy_kind, page_size,
                   float(jnp.sum(result) % 1_000_003), rows=rows, cols=cols)
+
+
+SPEC = AppSpec(
+    name="pathfinder", run=run_pathfinder, init_actor="cpu",
+    sizes={"fig3": dict(rows=2048, cols=512),
+           "fig11": dict(rows=2048, cols=512),
+           "small": dict(rows=1024, cols=256)})

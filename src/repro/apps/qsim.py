@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.apps.common import KB, MB, AppResult, finish, make_um
+from repro.apps.common import KB, MB, AppResult, AppSpec, finish, make_um
 from repro.core import Actor
 from repro.kernels.qv_gate import apply_two_qubit_gate
 
@@ -32,17 +32,17 @@ def run_qsim(policy_kind: str = "system", *, n_qubits: int = 16,
              auto_migrate: bool = True, seed: int = 0,
              interpret: bool = True) -> AppResult:
     depth = depth if depth is not None else max(2, n_qubits // 4)
-    nbytes = 8 * (1 << n_qubits)
+    n_amps = 1 << n_qubits  # statevector amplitudes, 8 B each (complex64)
     um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
-                      app_peak_bytes=nbytes, auto_migrate=auto_migrate)
+                      app_peak_bytes=8 * n_amps, auto_migrate=auto_migrate)
 
     with um.phase("alloc"):
-        sv = um.alloc("statevector", nbytes, pol)
+        sv = um.array("statevector", (n_amps,), jnp.complex64, pol)
 
     # GPU-side init: the simulator zeroes the statevector on device (|0...0>)
     with um.phase("gpu_init"):
-        state = jnp.zeros((1 << n_qubits,), jnp.complex64).at[0].set(1.0)
-        um.kernel(writes=[(sv, 0, nbytes)], actor=Actor.GPU, name="zero_state")
+        state = jnp.zeros((n_amps,), jnp.complex64).at[0].set(1.0)
+        um.launch("zero_state", writes=[sv[:]], actor=Actor.GPU)
         um.sync()
 
     rng = np.random.default_rng(seed)
@@ -58,22 +58,29 @@ def run_qsim(policy_kind: str = "system", *, n_qubits: int = 16,
                     # cudaMemPrefetchAsync chunking (Fig. 12): stream chunks
                     # device-side ahead of each partial gate sweep, so reads
                     # come from HBM instead of thrash-mode remote access
-                    chunk = min(nbytes, 64 * MB)
-                    for lo in range(0, nbytes, chunk):
-                        hi = min(lo + chunk, nbytes)
-                        um.prefetch(sv, lo, hi, overlap=True)
-                        um.kernel(reads=[(sv, lo, hi)], writes=[(sv, lo, hi)],
-                                  flops=32.0 * (hi - lo) / 16, actor=Actor.GPU,
-                                  name=f"gate_l{layer}_{q1}_{q2}_c{lo}")
+                    chunk = min(n_amps, 64 * MB // sv.itemsize)
+                    for lo in range(0, n_amps, chunk):
+                        band = sv[lo:lo + chunk]
+                        um.prefetch(band, overlap=True)
+                        um.launch(f"gate_l{layer}_{q1}_{q2}_c{lo * sv.itemsize}",
+                                  reads=[band], writes=[band],
+                                  flops=32.0 * band.nbytes / 16, actor=Actor.GPU)
                 else:
-                    um.kernel(reads=[(sv, 0, nbytes)], writes=[(sv, 0, nbytes)],
-                              flops=32.0 * (1 << n_qubits), actor=Actor.GPU,
-                              name=f"gate_l{layer}_{q1}_{q2}")
+                    um.launch(f"gate_l{layer}_{q1}_{q2}",
+                              reads=[sv[:]], writes=[sv[:]],
+                              flops=32.0 * n_amps, actor=Actor.GPU)
             um.sync()
 
     with um.phase("dealloc"):
-        um.free(sv)
+        um.free_live()
 
     norm = float(jnp.abs(jnp.vdot(state, state)))
     return finish(um, "qsim", policy_kind, page_size, norm,
                   n_qubits=n_qubits, depth=depth, prefetch=use_prefetch)
+
+
+SPEC = AppSpec(
+    name="qiskit", run=run_qsim, init_actor="gpu",
+    sizes={"fig3": dict(n_qubits=16, depth=3),
+           "fig11": dict(n_qubits=16, depth=2),
+           "small": dict(n_qubits=12, depth=3)})

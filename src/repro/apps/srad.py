@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.apps.common import KB, AppResult, finish, make_um
+from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
 from repro.core import Actor
 from repro.kernels.stencil5 import stencil5
 
@@ -30,14 +30,13 @@ def run_srad(policy_kind: str = "system", *, rows: int = 1024, cols: int = 1024,
              iters: int = 12, page_size: int = 64 * KB, lam: float = 0.5,
              oversub_ratio: float = 0.0, auto_migrate: bool = True,
              threshold: int = 256, interpret: bool = True) -> AppResult:
-    nbytes = rows * cols * 4
     um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
-                      app_peak_bytes=2 * nbytes, auto_migrate=auto_migrate,
-                      threshold=threshold)
+                      app_peak_bytes=2 * rows * cols * 4,
+                      auto_migrate=auto_migrate, threshold=threshold)
 
     with um.phase("alloc"):
-        J_d = um.alloc("J", nbytes, pol)
-        c_d = um.alloc("c", nbytes, pol)
+        J_m = um.array("J", (rows, cols), jnp.float32, pol)
+        c_m = um.array("c", (rows, cols), jnp.float32, pol)
 
     # GPU-side initialization (the paper's srad/qiskit pattern, §5.1.2):
     # data is first-touched by device kernels.
@@ -45,18 +44,17 @@ def run_srad(policy_kind: str = "system", *, rows: int = 1024, cols: int = 1024,
     with um.phase("gpu_init"):
         img = jax.random.uniform(key, (rows, cols), jnp.float32)
         J = jnp.exp(img / 255.0)
-        um.kernel(writes=[(J_d, 0, nbytes)], flops=2.0 * rows * cols,
-                  actor=Actor.GPU, name="extract")
+        um.launch("extract", writes=[J_m[:]], flops=2.0 * rows * cols,
+                  actor=Actor.GPU)
 
     per_iter = []
     with um.phase("compute"):
         for it in range(iters):
             J = _srad_iter(J, lam, interpret)
-            t = um.kernel(reads=[(J_d, 0, nbytes)], writes=[(c_d, 0, nbytes)],
-                          flops=12.0 * rows * cols, actor=Actor.GPU, name=f"grad{it}")
-            t += um.kernel(reads=[(J_d, 0, nbytes), (c_d, 0, nbytes)],
-                           writes=[(J_d, 0, nbytes)],
-                           flops=8.0 * rows * cols, actor=Actor.GPU, name=f"diff{it}")
+            t = um.launch(f"grad{it}", reads=[J_m[:]], writes=[c_m[:]],
+                          flops=12.0 * rows * cols, actor=Actor.GPU)
+            t += um.launch(f"diff{it}", reads=[J_m[:], c_m[:]], writes=[J_m[:]],
+                           flops=8.0 * rows * cols, actor=Actor.GPU)
             t += um.sync()
             tr = um.prof.traffic()
             per_iter.append({
@@ -65,8 +63,7 @@ def run_srad(policy_kind: str = "system", *, rows: int = 1024, cols: int = 1024,
             })
 
     with um.phase("dealloc"):
-        um.free(J_d)
-        um.free(c_d)
+        um.free_live()
 
     # per-iteration deltas for the Fig. 10 plot
     for i in range(len(per_iter) - 1, 0, -1):
@@ -74,3 +71,10 @@ def run_srad(policy_kind: str = "system", *, rows: int = 1024, cols: int = 1024,
         per_iter[i]["device_local"] -= per_iter[i - 1]["device_local"]
     return finish(um, "srad", policy_kind, page_size, float(jnp.mean(J)),
                   per_iter=per_iter, iters=iters)
+
+
+SPEC = AppSpec(
+    name="srad", run=run_srad, init_actor="gpu",
+    sizes={"fig3": dict(rows=512, cols=512, iters=12),
+           "fig11": dict(rows=512, cols=512, iters=8),
+           "small": dict(rows=256, cols=256, iters=8)})

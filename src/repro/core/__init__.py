@@ -1,8 +1,9 @@
 # The paper's primary contribution: the Grace Hopper unified-memory system
 # (system page table, first-touch, access-counter delayed migration,
 # fault-driven managed migration, oversubscription) as a composable runtime.
+from repro.core.buffer import BufferView, UMBuffer  # noqa: F401
 from repro.core.hardware import GRACE_HOPPER, TPU_V5E, HardwareModel  # noqa: F401
-from repro.core.pagetable import Actor, BlockTable, Tier  # noqa: F401
+from repro.core.pagetable import Actor, BlockTable, Tier, coalesce_runs  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     PolicyConfig,
     explicit_policy,

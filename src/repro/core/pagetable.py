@@ -23,6 +23,21 @@ import numpy as np
 _NTIERS = 3
 
 
+def coalesce_runs(ids: np.ndarray):
+    """Sorted unique integer ids -> maximal consecutive [lo, hi) runs.
+
+    The shared run-coalescing primitive: BFS sparse-access extents and the
+    serving pool's per-sequence page runs both reduce scattered page/node id
+    sets to a handful of contiguous extents through this."""
+    ids = np.asarray(ids, np.int64)
+    if len(ids) == 0:
+        return []
+    splits = np.flatnonzero(np.diff(ids) != 1) + 1
+    starts = ids[np.concatenate(([0], splits))]
+    ends = ids[np.concatenate((splits - 1, [len(ids) - 1]))] + 1
+    return [(int(s), int(e)) for s, e in zip(starts, ends)]
+
+
 class Tier(IntEnum):
     UNMAPPED = -1
     HOST = 0

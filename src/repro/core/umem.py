@@ -11,9 +11,13 @@ optim/offload) a two-tier HBM/host memory system with:
   * LRU eviction under device-capacity pressure (managed) vs graceful remote
     access (system), reproducing the paper's oversubscription behavior (§7).
 
-Applications interact through alloc/free, phase(), kernel(), copy() and
-prefetch(). Time is *modeled* via the HardwareModel (this container has no
-GPU/TPU); correctness of the application math is real JAX executed on CPU.
+Applications interact through the typed buffer front-end — array() /
+from_host() return UMBuffers whose numpy-style slices feed launch(),
+staged(), prefetch() and demote() (see core/buffer.py and docs/memspace.md)
+— while alloc/free, phase(), kernel() and copy() remain the raw runtime
+surface the front-end lowers onto. Time is *modeled* via the HardwareModel
+(this container has no GPU/TPU); correctness of the application math is
+real JAX executed on CPU.
 
 The hot path is extent-based: kernel() resolves each byte range to a
 (lo_page, hi_page) extent once and every page-table operation under it —
@@ -32,12 +36,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.buffer import BufferView, UMBuffer, as_view
 from repro.core.hardware import GRACE_HOPPER, HardwareModel
 from repro.core.pagetable import Actor, BlockTable, Tier
-from repro.core.policy import PolicyConfig
+from repro.core.policy import PolicyConfig, system_policy
 from repro.core.profiler import MemoryProfiler
 
 Range = Tuple["Allocation", int, int]  # (alloc, lo, hi) byte range
+
+
+def _as_range(r, actor: Actor) -> Range:
+    """Launch/prefetch argument -> raw Range: BufferViews and UMBuffers
+    resolve against the actor (CPU actors hit a staged buffer's host side);
+    raw (alloc, lo, hi) tuples pass through untouched."""
+    if isinstance(r, (BufferView, UMBuffer)):
+        return as_view(r).resolve(actor)
+    return r
 
 
 @dataclass
@@ -58,13 +72,18 @@ class OutOfDeviceMemory(RuntimeError):
 
 class UnifiedMemory:
     def __init__(self, hw: HardwareModel = GRACE_HOPPER,
-                 profiler: Optional[MemoryProfiler] = None):
+                 profiler: Optional[MemoryProfiler] = None,
+                 staging_page_size: int = 64 * 1024):
         self.hw = hw
         self.prof = profiler or MemoryProfiler()
         self.clock = 0.0
         self.allocs: Dict[str, Allocation] = {}
         self.epoch = 0
         self._pending_overlap = 0.0  # async-prefetch seconds hidden under compute
+        # page size of from_host() staging buffers under the explicit policy
+        # (the host side of the cudaMalloc+malloc pair uses the *application's*
+        # system page size, not a hard-wired default)
+        self.staging_page_size = staging_page_size
         # cached residency over live allocations (kept in lockstep with every
         # BlockTable mutation; makes _sample O(1) per op)
         self._host_bytes = 0
@@ -145,6 +164,88 @@ class UnifiedMemory:
                          -(-a.nbytes // a.policy.migration_granule))
         a.freed = True
         self._sample()
+
+    def free_live(self, *, keep_reserved: bool = True) -> None:
+        """Free every live allocation in allocation order. Names starting
+        with ``__`` (harness-reserved, e.g. the oversubscription ballast)
+        are kept unless keep_reserved=False."""
+        for a in list(self.allocs.values()):
+            if a.freed:
+                continue
+            if keep_reserved and a.name.startswith("__"):
+                continue
+            self.free(a)
+
+    # -------------------------------------------------------------- buffers
+    def array(self, name: str, shape, dtype, policy: PolicyConfig) -> UMBuffer:
+        """Allocate a typed buffer: shape x dtype under `policy`.
+
+        The buffer-centric analogue of alloc(): slices of the returned
+        UMBuffer feed launch()/prefetch()/demote() instead of raw byte
+        ranges. Device-only scratch and GPU-initialized data use this; data
+        that originates host-side should use from_host()."""
+        shape = (shape,) if isinstance(shape, (int, np.integer)) else tuple(shape)
+        nbytes = int(np.prod(np.asarray(shape, np.int64))) * np.dtype(dtype).itemsize
+        a = self.alloc(name, nbytes, policy)
+        return UMBuffer(self, a, shape, dtype)
+
+    def from_host(self, name: str, shape, dtype,
+                  policy: PolicyConfig) -> UMBuffer:
+        """A buffer whose contents originate on the host (CPU init).
+
+        Under managed/system policies this is exactly array(): first-touch
+        placement follows the CPU writer. Under the explicit policy it
+        materializes the cudaMalloc + malloc pair — a device buffer plus a
+        ``<name>__host`` staging buffer (at ``staging_page_size``, the
+        application's system page size) — and launch() routes CPU-actor
+        accesses to the staging side. um.staged() charges the h2d/d2h copies
+        at phase boundaries."""
+        buf = self.array(name, shape, dtype, policy)
+        if policy.kind == "explicit":
+            buf.host = self.alloc(
+                name + "__host", buf.nbytes,
+                system_policy(self.staging_page_size, auto_migrate=False))
+        return buf
+
+    def launch(self, name: str = "kernel", *, reads: Sequence = (),
+               writes: Sequence = (), flops: float = 0.0,
+               actor: Actor = Actor.GPU) -> float:
+        """Buffer-level kernel launch: the tracked, policy-agnostic front
+        door of kernel(). reads/writes take BufferViews (``buf[i:j]``,
+        ``buf.rows(lo, hi)``) or whole UMBuffers; each resolves to exactly
+        the byte extent the raw Range API would have used, so charges are
+        bit-identical. CPU-actor accesses to from_host() buffers land in
+        their explicit-policy staging allocation."""
+        return self.kernel(
+            reads=[_as_range(r, actor) for r in reads],
+            writes=[_as_range(w, actor) for w in writes],
+            flops=flops, actor=actor, name=name)
+
+    @contextlib.contextmanager
+    def staged(self, h2d: Sequence = (), d2h: Sequence = (), *,
+               h2d_phase: str = "h2d", d2h_phase: str = "d2h"):
+        """Explicit-policy staging boundary around a compute region.
+
+        For every listed buffer/view under the *explicit* policy, charges the
+        cudaMemcpy h2d copies on entry (phase `h2d_phase`) and the d2h copies
+        on exit (phase `d2h_phase`), in list order. Buffers under managed or
+        system policies pass through untouched — the same `with` block is the
+        single code path for all three memory-management versions."""
+        up = [as_view(v) for v in h2d]
+        down = [as_view(v) for v in d2h]
+        todo = [v for v in up if v.buf.policy.kind == "explicit"]
+        if todo:
+            with self.phase(h2d_phase):
+                for v in todo:
+                    self.copy(v.buf.alloc, v.lo, v.hi, "h2d")
+        try:
+            yield self
+        finally:
+            todo = [v for v in down if v.buf.policy.kind == "explicit"]
+            if todo:
+                with self.phase(d2h_phase):
+                    for v in todo:
+                        self.copy(v.buf.alloc, v.lo, v.hi, "d2h")
 
     # ------------------------------------------------------- page-level ops
     def _first_touch(self, a: Allocation, p0: int, p1: int, actor: Actor) -> None:
@@ -452,12 +553,16 @@ class UnifiedMemory:
         self._sample()
         return nbytes / bw
 
-    def prefetch(self, a: Allocation, lo: int, hi: int,
+    def prefetch(self, a, lo: Optional[int] = None, hi: Optional[int] = None,
                  overlap: bool = False) -> float:
         """cudaMemPrefetchAsync analogue: migrate range to device.
 
-        overlap=True models the async stream: the migration cost hides under
-        the next kernel (charged as max(kernel, prefetch))."""
+        `a` is an Allocation with byte bounds lo/hi, or a BufferView/UMBuffer
+        (bounds taken from the view). overlap=True models the async stream:
+        the migration cost hides under the next kernel (charged as
+        max(kernel, prefetch))."""
+        if lo is None:
+            a, lo, hi = _as_range(a, Actor.GPU)
         t0 = self.clock
         assert a.table is not None, "prefetch needs a paged allocation"
         p0, p1 = a.table.page_range(lo, hi)
@@ -476,23 +581,29 @@ class UnifiedMemory:
         self._sample()
         return self.clock - t0
 
-    def prefetch_async(self, ranges: Sequence[Range]) -> float:
-        """Async multi-extent prefetch: promote each [lo, hi) byte range of
-        each (alloc, lo, hi) to the device ahead of the kernel that will read
-        it. The migration cost accrues to ``_pending_overlap`` and hides under
-        the next kernel (serve/engine.py promotes a resumed sequence's extents
-        ahead of its decode turn through this). Returns the hidden seconds."""
+    def prefetch_async(self, ranges: Sequence) -> float:
+        """Async multi-extent prefetch: promote each item — a raw
+        (alloc, lo, hi) range or a BufferView — to the device ahead of the
+        kernel that will read it. The migration cost accrues to
+        ``_pending_overlap`` and hides under the next kernel (serve/engine.py
+        promotes a resumed sequence's extents ahead of its decode turn
+        through this). Returns the hidden seconds."""
         before = self._pending_overlap
-        for a, lo, hi in ranges:
+        for r in ranges:
+            a, lo, hi = _as_range(r, Actor.GPU)
             self.prefetch(a, lo, hi, overlap=True)
         return self._pending_overlap - before
 
-    def demote(self, a: Allocation, lo: int, hi: int) -> float:
+    def demote(self, a, lo: Optional[int] = None,
+               hi: Optional[int] = None) -> float:
         """Demote a range host-side (cudaMemPrefetchAsync-to-cpuDeviceId
         analogue): device-resident pages of [lo, hi) move to host memory,
         charged at the d2h link. Unmapped pages stay unmapped. The serve
         scheduler uses this to push a preempted sequence's KV pages out of
-        HBM before its pool pages are handed to another sequence."""
+        HBM before its pool pages are handed to another sequence. Accepts a
+        BufferView in place of (Allocation, lo, hi)."""
+        if lo is None:
+            a, lo, hi = _as_range(a, Actor.GPU)
         t0 = self.clock
         assert a.table is not None, "demote needs a paged allocation"
         t = a.table

@@ -187,8 +187,8 @@ class ServeEngine:
     # ---------------------------------------------------------- preemption
     def _preempt(self, req: Request) -> None:
         if self.um is not None:
-            for lo, hi in self.cache.seq_extents(req.sid):
-                self.um.demote(self.cache.alloc, lo, hi)
+            for band in self.cache.seq_views(req.sid):
+                self.um.demote(band)
         req.saved = self.cache.swap_out(req.sid)
         req.sid = -1
         req.state = SeqState.PREEMPTED
@@ -210,12 +210,12 @@ class ServeEngine:
         if self.um is None or not self._needs_prefetch:
             self._needs_prefetch = []
             return
-        ranges = [(self.cache.alloc, lo, hi)
-                  for req in self._needs_prefetch if req.sid >= 0
-                  for lo, hi in self.cache.seq_extents(req.sid)]
+        bands = [band
+                 for req in self._needs_prefetch if req.sid >= 0
+                 for band in self.cache.seq_views(req.sid)]
         self._needs_prefetch = []
-        if ranges:
-            self.um.prefetch_async(ranges)
+        if bands:
+            self.um.prefetch_async(bands)
 
     # -------------------------------------------------------------- prefill
     def _prefill_step(self) -> int:

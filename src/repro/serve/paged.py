@@ -25,7 +25,8 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Actor, UnifiedMemory, system_policy
+from repro.core import (Actor, BufferView, UnifiedMemory, coalesce_runs,
+                        system_policy)
 from repro.models.layout import HeadLayout
 
 
@@ -64,10 +65,15 @@ class PagedKVCache:
         if um is not None:
             # serving pages are big (page_bytes >> the HW remote-access grain),
             # so one decode touch of a remote page already counts several
-            # transactions — a low threshold keeps the counter path responsive
-            self.alloc = um.alloc("kv_pool", self.num_pages * self.page_bytes,
-                                  system_policy(page_size=self.page_bytes,
-                                                threshold=counter_threshold))
+            # transactions — a low threshold keeps the counter path responsive.
+            # The pool is a typed buffer (num_pages x page_bytes), the same
+            # front-end the paper apps use: one umem page per pool page, and
+            # buf.rows(lo, hi) is the extent of a pool-page run.
+            self.buf = um.array("kv_pool", (self.num_pages, self.page_bytes),
+                                np.uint8,
+                                system_policy(page_size=self.page_bytes,
+                                              threshold=counter_threshold))
+            self.alloc = self.buf.alloc
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> int:
@@ -189,29 +195,32 @@ class PagedKVCache:
         return sid
 
     # ------------------------------------------------------------- umem
-    def seq_extents(self, sid: int) -> List[Tuple[int, int]]:
-        """Byte extents of the sequence's pool pages, consecutive pages
+    def _seq_page_runs(self, sid: int) -> List[Tuple[int, int]]:
+        """[lo, hi) pool-page runs of the sequence, consecutive pages
         coalesced (the allocator is mostly sequential, so a sequence usually
-        collapses to a handful of ranges)."""
+        collapses to a handful of runs)."""
         npages = -(-int(self.lengths[sid]) // self.page_size)
         pids = np.sort(self.page_table[sid, :npages].astype(np.int64))
-        pids = pids[pids != 0]
-        if len(pids) == 0:
-            return []
-        splits = np.flatnonzero(np.diff(pids) != 1) + 1
-        starts = pids[np.concatenate(([0], splits))]
-        ends = pids[np.concatenate((splits - 1, [len(pids) - 1]))] + 1
-        return [(int(s) * self.page_bytes, int(e) * self.page_bytes)
-                for s, e in zip(starts, ends)]
+        return coalesce_runs(pids[pids != 0])
+
+    def seq_views(self, sid: int) -> List[BufferView]:
+        """The sequence's pool pages as buffer row bands — what the engine
+        hands to um.demote / um.prefetch_async and _touch launches over."""
+        return [self.buf.rows(s, e) for s, e in self._seq_page_runs(sid)]
+
+    def seq_extents(self, sid: int) -> List[Tuple[int, int]]:
+        """Byte extents of the sequence's pool pages (coalesced runs)."""
+        return [(s * self.page_bytes, e * self.page_bytes)
+                for s, e in self._seq_page_runs(sid)]
 
     def _touch(self, sid: int) -> None:
         if self.um is None:
             return
         # account page-granular access in the unified-memory runtime: batch
-        # every resident page of the sequence into ONE kernel call
-        reads = [(self.alloc, lo, hi) for lo, hi in self.seq_extents(sid)]
-        if reads:
-            self.um.kernel(reads=reads, actor=Actor.GPU, name=f"kv_seq{sid}")
+        # every resident page of the sequence into ONE tracked launch
+        views = self.seq_views(sid)
+        if views:
+            self.um.launch(f"kv_seq{sid}", reads=views, actor=Actor.GPU)
 
     # ------------------------------------------------------------- views
     def batch_view(self, sids):

@@ -1,32 +1,27 @@
-"""The six paper apps: all three memory-management versions run and the
-paper's qualitative claims hold on the modeled Grace Hopper."""
+"""The six paper apps: all three memory-management versions run through the
+one buffer-centric code path and the paper's qualitative claims hold on the
+modeled Grace Hopper. Sizes come from each AppSpec's "small" preset."""
 import pytest
 
-from repro.apps import APP_RUNNERS, run_hotspot, run_qsim, run_srad
+from repro.apps import APPS, run_app, run_hotspot, run_qsim, run_srad
 
-SMALL = {
-    "qiskit": dict(n_qubits=12, depth=3),
-    "needle": dict(n=512),
-    "pathfinder": dict(rows=1024, cols=256),
-    "bfs": dict(n_nodes=1 << 12),
-    "hotspot": dict(rows=256, cols=256, iters=6),
-    "srad": dict(rows=256, cols=256, iters=8),
-}
+SMALL = {name: dict(spec.sizes["small"]) for name, spec in APPS.items()}
 
 
-@pytest.mark.parametrize("app", sorted(APP_RUNNERS))
+@pytest.mark.parametrize("app", sorted(APPS))
 @pytest.mark.parametrize("policy", ["explicit", "managed", "system"])
 def test_app_runs_all_policies(app, policy):
-    r = APP_RUNNERS[app](policy, **SMALL[app])
+    r = run_app(app, policy, preset="small")
     assert r.total > 0
-    assert r.checksum == APP_RUNNERS[app]("explicit", **SMALL[app]).checksum \
+    assert r.checksum == run_app(app, "explicit", preset="small").checksum \
         or policy == "explicit"  # same math regardless of memory policy
 
 
-@pytest.mark.parametrize("app", ["hotspot", "pathfinder", "needle", "bfs"])
+@pytest.mark.parametrize(
+    "app", [n for n, s in APPS.items() if s.init_actor == "cpu"])
 def test_cpu_init_apps_prefer_system_memory(app):
     """Paper Fig. 3 class 1: system >= managed for CPU-initialized apps."""
-    t = {p: APP_RUNNERS[app](p, **SMALL[app]).time_excluding_cpu_init()
+    t = {p: run_app(app, p, preset="small").time_excluding_cpu_init()
          for p in ("managed", "system")}
     assert t["system"] < t["managed"]
 

@@ -1,0 +1,60 @@
+"""Tier-1 guard on the golden charge-parity fixture.
+
+scripts/check_parity.py verifies all 66 fig3/fig11 configurations (CI runs
+it as its own job); this pins a cheap representative subset — every app
+class (CPU-init regular/irregular, GPU-init, graph), every policy, and
+oversubscribed cases — so modeled-charge drift fails fast in tier-1."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.apps import APPS, charge_snapshot
+
+FIXTURE = Path(__file__).parent / "fixtures" / "parity.json"
+KB = 1024
+
+SUBSET = [
+    "fig3/hotspot/explicit",
+    "fig3/hotspot/system",
+    "fig3/srad/managed",
+    "fig3/bfs/system",
+    "fig3/pathfinder/explicit",
+    "fig11/hotspot/oversub1.5/managed",
+    "fig11/needle/oversub2.0/system",
+    "fig11/srad/oversub3.0/managed",
+]
+
+
+def _config(key: str):
+    parts = key.split("/")
+    if parts[0] == "fig3":
+        _, app, pol = parts
+        return app, pol, dict(APPS[app].sizes["fig3"])
+    _, app, ratio, pol = parts
+    return app, pol, dict(APPS[app].sizes["fig11"],
+                          oversub_ratio=float(ratio[len("oversub"):]),
+                          page_size=4 * KB)
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    assert FIXTURE.exists(), "run scripts/check_parity.py --write first"
+    return json.loads(FIXTURE.read_text())
+
+
+def test_fixture_covers_all_66_configs(fixture):
+    assert len(fixture) == 66
+    assert sum(1 for k in fixture if k.startswith("fig3/")) == 18
+    assert sum(1 for k in fixture if k.startswith("fig11/")) == 48
+
+
+@pytest.mark.parametrize("key", SUBSET)
+def test_charges_bit_identical_to_fixture(key, fixture):
+    app, pol, kw = _config(key)
+    got = charge_snapshot(APPS[app].run(pol, **kw))
+    want = fixture[key]
+    # compare section-by-section so a drift names the exact counter
+    for section in want:
+        assert got[section] == want[section], f"{key}: {section} drifted"
+    assert got == want

@@ -1,9 +1,11 @@
-"""Benchmark harness utilities: CSV emission per paper table/figure."""
+"""Benchmark harness utilities: CSV emission per paper table/figure, plus
+machine-readable JSON snapshots (``BENCH_<module>.json``) so the perf
+trajectory is tracked across PRs (CI uploads them as artifacts)."""
 from __future__ import annotations
 
-import sys
-import time
-from typing import Iterable
+import json
+import os
+from pathlib import Path
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -12,3 +14,15 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def header() -> None:
     print("name,us_per_call,derived")
+
+
+def json_dir() -> Path:
+    """Where BENCH_*.json files land (override with BENCH_JSON_DIR)."""
+    return Path(os.environ.get("BENCH_JSON_DIR", "."))
+
+
+def write_json(module: str, results: dict) -> Path:
+    """Write a benchmark module's results as BENCH_<module>.json."""
+    path = json_dir() / f"BENCH_{module}.json"
+    path.write_text(json.dumps(results, indent=1, sort_keys=True) + "\n")
+    return path

@@ -1,8 +1,11 @@
 """Benchmark harness: one module per paper table/figure. CSV to stdout.
 
 Exits non-zero if ANY module fails, so CI smoke runs can gate on it.
+``--json [DIR]`` directs modules that support it (sim_throughput) to write
+their BENCH_<module>.json snapshots into DIR (default: cwd).
 """
 import importlib
+import os
 import sys
 import traceback
 
@@ -25,6 +28,14 @@ MODULES = [
 
 def main(argv=None) -> int:
     """Run all (or the named) benchmark modules; return a shell exit code."""
+    argv = list(argv) if argv else []
+    if "--json" in argv:
+        i = argv.index("--json")
+        argv.pop(i)
+        if i < len(argv) and not argv[i].startswith("benchmarks."):
+            os.environ["BENCH_JSON_DIR"] = argv.pop(i)
+        else:
+            os.environ.setdefault("BENCH_JSON_DIR", ".")
     names = argv if argv else MODULES
     header()
     failed = []

@@ -2,50 +2,65 @@
 
 Not a paper figure — this tracks the *runtime's own* speed (the paper's
 §6 page-size sweep needs GB-scale allocations at 4 KB pages, which is only
-tractable if the page-table runtime is extent-based rather than per-page).
-Two workloads per page size (4 KB / 64 KB / 2 MB), both on a 1 GiB buffer:
+tractable because the page-table runtime is run-compressed: cost scales
+with fragmentation, not allocation size). Workloads:
 
-  stream  -- system policy, GPU reads a 64 MiB sliding window with periodic
-             syncs (counter-based delayed migration path)
+  stream  -- system policy, GPU reads a sliding window (NBYTES/16) with
+             periodic syncs (counter-based delayed migration path); 1 GiB
+             at 4 KB / 64 KB / 2 MB pages
   evict   -- managed policy with an explicit ballast squeezing free device
              memory to 256 MiB, so every window fault migrates + evicts
-             (the LRU eviction path)
+             (the LRU eviction path); 1 GiB at the same page sizes
+  huge    -- the stream workload at 16 GiB / 4 KB pages (4M+ PTEs): the
+             scale where the old dense per-page runtime collapsed to
+             ~295 kernel-ops/s and ~80 MB of metadata arrays. The
+             run-compressed core keeps per-op cost O(runs) and metadata
+             O(fragmentation); the emitted metadata_bytes proves no
+             O(num_pages) array was ever allocated.
 
-Emits wall-clock us/kernel-op plus kernel-ops/sec and modeled-pages/sec.
-SIM_TP_OPS scales the op count (default 48 stream / 12 evict).
+Emits wall-clock us/kernel-op plus kernel-ops/sec and modeled-pages/sec to
+stdout (CSV) and writes BENCH_simthroughput.json (workload -> metrics) for
+the cross-PR perf trajectory. SIM_TP_OPS scales the op count (default 48
+stream / 12 evict). SIM_TP_FLOOR="stream/4KB=2000,huge/4KB=1000" makes the
+run fail if any named workload drops below its kernel-ops/s floor — the CI
+perf-smoke gate.
 """
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 from repro.core import Actor, UnifiedMemory, explicit_policy, managed_policy, system_policy
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 
 KB = 1024
 MB = 1024 * 1024
 GB = 1024 * 1024 * 1024
 
 NBYTES = 1 * GB
-WINDOW = 64 * MB
+HUGE_NBYTES = 16 * GB
 PAGE_SIZES = {"4KB": 4 * KB, "64KB": 64 * KB, "2MB": 2 * MB}
 
 
-def _stream(page_size: int, ops: int) -> tuple:
+def _stream(page_size: int, ops: int, nbytes: int = NBYTES) -> tuple:
     um = UnifiedMemory()
-    a = um.alloc("buf", NBYTES, system_policy(page_size))
-    um.kernel(writes=[(a, 0, NBYTES)], actor=Actor.CPU, name="init")
+    a = um.alloc("buf", nbytes, system_policy(page_size))
+    um.kernel(writes=[(a, 0, nbytes)], actor=Actor.CPU, name="init")
+    window = nbytes // 16
     t0 = time.perf_counter()
     pages = 0
     for i in range(ops):
-        lo = (i * WINDOW) % NBYTES
-        hi = min(lo + WINDOW, NBYTES)
+        lo = (i * window) % nbytes
+        hi = min(lo + window, nbytes)
         um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU)
         pages += -(-(hi - lo) // page_size)
         if i % 8 == 7:
             um.sync()
-    return time.perf_counter() - t0, pages
+    dt = time.perf_counter() - t0
+    meta = a.table.metadata_nbytes() + a.pending.bytes_used()
+    return dt, pages, meta
 
 
 def _evict(page_size: int, ops: int) -> tuple:
@@ -54,27 +69,66 @@ def _evict(page_size: int, ops: int) -> tuple:
     um.alloc("__ballast__", ballast, explicit_policy())
     a = um.alloc("buf", NBYTES, managed_policy(page_size))
     um.kernel(writes=[(a, 0, NBYTES)], actor=Actor.CPU, name="init")
+    window = NBYTES // 16
     t0 = time.perf_counter()
     pages = 0
     for i in range(ops):
-        lo = (i * WINDOW) % NBYTES
-        hi = min(lo + WINDOW, NBYTES)
+        lo = (i * window) % NBYTES
+        hi = min(lo + window, NBYTES)
         um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU)
         pages += -(-(hi - lo) // page_size)
-    return time.perf_counter() - t0, pages
+    dt = time.perf_counter() - t0
+    meta = a.table.metadata_nbytes() + a.pending.bytes_used()
+    return dt, pages, meta
+
+
+def _record(results: dict, key: str, dt: float, ops: int, pages: int,
+            meta: int) -> None:
+    results[key] = {
+        "us_per_op": dt / ops * 1e6,
+        "kernel_ops_per_s": ops / dt,
+        "modeled_pages_per_s": pages / dt,
+        "metadata_bytes": meta,
+    }
+    emit(f"sim_throughput/{key}", dt / ops * 1e6,
+         f"kernel_ops_per_s={ops / dt:.1f};modeled_pages_per_s={pages / dt:.0f}"
+         f";metadata_bytes={meta}")
+
+
+def _check_floors(results: dict) -> None:
+    """SIM_TP_FLOOR='stream/4KB=2000,...': fail if ops/s drops below."""
+    spec = os.environ.get("SIM_TP_FLOOR", "")
+    if not spec:
+        return
+    failures = []
+    for item in spec.split(","):
+        key, floor = item.split("=")
+        key, floor = key.strip(), float(floor)
+        got = results[key]["kernel_ops_per_s"]
+        if got < floor:
+            failures.append(f"{key}: {got:.1f} kernel-ops/s < floor {floor:.1f}")
+    if failures:
+        print("sim_throughput: PERF FLOOR VIOLATED\n  "
+              + "\n  ".join(failures), file=sys.stderr)
+        # RuntimeError (not SystemExit) so benchmarks/run.py records this as
+        # a module failure instead of aborting the whole harness
+        raise RuntimeError("sim_throughput perf floor violated")
 
 
 def run() -> None:
     ops = int(os.environ.get("SIM_TP_OPS", "48"))
+    results = {}
     for label, ps in PAGE_SIZES.items():
-        dt, pages = _stream(ps, ops)
-        emit(f"sim_throughput/stream/{label}", dt / ops * 1e6,
-             f"kernel_ops_per_s={ops / dt:.1f};modeled_pages_per_s={pages / dt:.0f}")
+        dt, pages, meta = _stream(ps, ops)
+        _record(results, f"stream/{label}", dt, ops, pages, meta)
     eops = max(1, ops // 4)
     for label, ps in PAGE_SIZES.items():
-        dt, pages = _evict(ps, eops)
-        emit(f"sim_throughput/evict/{label}", dt / eops * 1e6,
-             f"kernel_ops_per_s={eops / dt:.1f};modeled_pages_per_s={pages / dt:.0f}")
+        dt, pages, meta = _evict(ps, eops)
+        _record(results, f"evict/{label}", dt, eops, pages, meta)
+    dt, pages, meta = _stream(4 * KB, ops, nbytes=HUGE_NBYTES)
+    _record(results, "huge/4KB", dt, ops, pages, meta)
+    write_json("simthroughput", results)
+    _check_floors(results)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@
 from repro.core.buffer import BufferView, UMBuffer  # noqa: F401
 from repro.core.hardware import GRACE_HOPPER, TPU_V5E, HardwareModel  # noqa: F401
 from repro.core.pagetable import Actor, BlockTable, Tier, coalesce_runs  # noqa: F401
+from repro.core.runs import RunMap, union_runs  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     PolicyConfig,
     explicit_policy,

@@ -66,6 +66,19 @@ class BufferView:
         assert table is not None, "explicit allocations have no page table"
         return table.page_range(self.lo, self.hi)
 
+    def page_runs(self, tier=None):
+        """The view's extent resolved against the run-compressed page table:
+        (starts, ends, tiers) of the tier runs it overlaps, or just
+        (starts, ends) of the sub-runs in `tier` when one is given. O(runs
+        overlapping the view), never O(pages) — the introspection twin of
+        what kernel() does internally."""
+        table = self.buf.alloc.table
+        assert table is not None, "explicit allocations have no page table"
+        p0, p1 = table.page_range(self.lo, self.hi)
+        if tier is None:
+            return table.tier_runs(p0, p1)
+        return table.runs_of(tier, p0, p1)
+
     def __repr__(self) -> str:
         return f"BufferView({self.buf.name!r}, [{self.lo}, {self.hi}))"
 

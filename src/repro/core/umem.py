@@ -19,15 +19,17 @@ surface the front-end lowers onto. Time is *modeled* via the HardwareModel
 (this container has no GPU/TPU); correctness of the application math is
 real JAX executed on CPU.
 
-The hot path is extent-based: kernel() resolves each byte range to a
-(lo_page, hi_page) extent once and every page-table operation under it —
+The hot path is *run-compressed*: kernel() resolves each byte range to a
+(lo_page, hi_page) extent once, and every page-table operation under it —
 first-touch mapping, LRU-epoch touches, fault/granule counting, speculative
-prefetch expansion, LRU victim selection — is vectorized numpy over slice
-views of the extent. Residency totals are cached (updated incrementally on
-every map/move), so profiler sampling is O(1) per op instead of re-scanning
-every allocation's tier array. The charge math is unchanged from the dense
-per-page implementation — modeled times and traffic are bit-identical.
-"""
+prefetch expansion, access-counter bumps, LRU victim selection, sync-point
+notification draining — works on run intersections of the extent with the
+table's interval metadata (see core/pagetable.py and core/runs.py). Cost is
+O(runs overlapping the extent), never O(pages in extent): a uniform 16M-page
+working set is one run. Residency totals are cached (updated incrementally
+on every map/move), so profiler sampling is O(1) per op. The charge math is
+unchanged from the dense per-page implementation — modeled times and
+traffic are bit-identical (enforced by scripts/check_parity.py)."""
 from __future__ import annotations
 
 import contextlib
@@ -41,6 +43,7 @@ from repro.core.hardware import GRACE_HOPPER, HardwareModel
 from repro.core.pagetable import Actor, BlockTable, Tier
 from repro.core.policy import PolicyConfig, system_policy
 from repro.core.profiler import MemoryProfiler
+from repro.core.runs import RunMap, union_runs
 
 Range = Tuple["Allocation", int, int]  # (alloc, lo, hi) byte range
 
@@ -61,8 +64,8 @@ class Allocation:
     policy: PolicyConfig
     table: Optional[BlockTable]  # None for explicit (device-resident, no PTEs)
     device_bytes_explicit: int = 0
-    pending: Optional[np.ndarray] = None  # system: notification-pending pages
-    pending_count: int = 0  # fast-path: #True entries ever set minus cleared
+    pending: Optional[RunMap] = None  # system: notification-pending page runs
+    pending_count: int = 0  # fast-path: #pending pages ever set minus cleared
     freed: bool = False
 
 
@@ -111,15 +114,17 @@ class UnifiedMemory:
         return self.hw.device_capacity - self._device_bytes
 
     def _recompute_residency(self) -> Tuple[int, int]:
-        """Slow-path recount (tests assert it matches the cached totals)."""
+        """Slow-path recount (tests assert it matches the cached totals):
+        re-derives each table's residency from its run structure."""
         host = dev = 0
         for a in self.allocs.values():
             if a.freed:
                 continue
             dev += a.device_bytes_explicit
             if a.table is not None:
-                host += a.table.resident_bytes(Tier.HOST)
-                dev += a.table.resident_bytes(Tier.DEVICE)
+                _, nbytes = a.table.recount()
+                host += int(nbytes[int(Tier.HOST) + 1])
+                dev += int(nbytes[int(Tier.DEVICE) + 1])
         return host, dev
 
     @contextlib.contextmanager
@@ -144,7 +149,7 @@ class UnifiedMemory:
         else:
             table = BlockTable(name, nbytes, policy.page_size)
             a = Allocation(name, nbytes, policy, table=table,
-                           pending=np.zeros(table.num_pages, bool))
+                           pending=RunMap(table.num_pages, 0, np.int8))
             # lazy PTEs: allocation itself only creates VMA bookkeeping
             self._charge(self.hw.alloc_per_page * min(table.num_pages, 64))
         self.allocs[name] = a
@@ -251,8 +256,9 @@ class UnifiedMemory:
     def _first_touch(self, a: Allocation, p0: int, p1: int, actor: Actor) -> None:
         """Lazily map the unmapped pages of extent [p0, p1) to the toucher's tier."""
         t = a.table
-        unmapped = t.tier[p0:p1] == int(Tier.UNMAPPED)
-        n_unmapped = int(np.count_nonzero(unmapped))
+        if t.resident_pages(Tier.UNMAPPED) == 0:
+            return  # O(1) steady-state exit: the whole table is mapped
+        n_unmapped, need = t.unmapped_stats(p0, p1)
         if n_unmapped == 0:
             return
         tr = self.prof.traffic()
@@ -271,7 +277,6 @@ class UnifiedMemory:
             tr.pte_inits_cpu += n_unmapped
         tier = actor.home_tier
         if tier is Tier.DEVICE:
-            need = t._mask_bytes(p0, p1, unmapped)
             if need > self.device_free():
                 if a.policy.kind == "managed":
                     self._evict_lru(need - self.device_free(), exclude=a)
@@ -279,10 +284,18 @@ class UnifiedMemory:
                         tier = Tier.HOST  # spill the remainder
                 else:
                     tier = Tier.HOST  # system memory: map host-side instead
-        self._apply_delta(t.map_mask(p0, p1, unmapped, tier))
+        self._apply_delta(t.map_unmapped(p0, p1, tier))
 
     def _evict_lru(self, need_bytes: int, exclude: Optional[Allocation] = None) -> None:
         """Evict LRU managed device-resident pages until need_bytes freed.
+
+        Victim selection is run-based: each candidate contributes its
+        (device-tier run ∩ LRU-epoch run) pieces — O(runs), not O(pages) —
+        and a stable sort of the pieces by epoch reproduces the dense
+        per-page LRU order exactly (pages inside a piece are consecutive and
+        share an epoch; ties keep (alloc, page) insertion order). The
+        boundary piece is split at the page where the freed-bytes cumsum
+        crosses `need_bytes`.
 
         `exclude` shields the faulting allocation's *current-step* working set
         (pages with last_access_epoch == the in-flight kernel's epoch) from
@@ -300,66 +313,133 @@ class UnifiedMemory:
         cands: List[Allocation] = [
             a for a in self.allocs.values()
             if not a.freed and a.table is not None and a.policy.kind == "managed"]
-        epochs, sizes, page_idx, alloc_idx = [], [], [], []
-        for i, a in enumerate(cands):
-            pages = a.table.pages_in(Tier.DEVICE)
-            if a is exclude and len(pages):
-                pages = pages[a.table.last_access_epoch[pages] < self.epoch]
-            if len(pages) == 0:
-                continue
-            epochs.append(a.table.last_access_epoch[pages])
-            sizes.append(a.table.page_bytes(pages))
-            page_idx.append(pages)
-            alloc_idx.append(np.full(len(pages), i, np.int32))
-        if not epochs:
+        # cached-counter early-out: no managed allocation has device-resident
+        # pages -> nothing to evict, no run/array work at all
+        if not any(a.table.resident_pages(Tier.DEVICE) for a in cands):
             return
-        epochs = np.concatenate(epochs)
-        sizes = np.concatenate(sizes)
-        page_idx = np.concatenate(page_idx)
-        alloc_idx = np.concatenate(alloc_idx)
-        # stable sort == python sort of (epoch) with (alloc, page) insertion
-        # order as tiebreak: the LRU victim order
-        order = np.argsort(epochs, kind="stable")
-        csum = np.cumsum(sizes[order])
-        # take victims while bytes freed *before* each victim is < need
-        chosen = order[(csum - sizes[order]) < need_bytes]
+        piece_s, piece_e, piece_ep, piece_ai = [], [], [], []
+        for i, a in enumerate(cands):
+            t = a.table
+            if t.resident_pages(Tier.DEVICE) == 0:
+                continue
+            ds, de = t.runs_of(Tier.DEVICE)
+            for s0, e0 in zip(ds, de):
+                es, ee, ev = t.epoch_runs(int(s0), int(e0))
+                if a is exclude:
+                    m = ev < self.epoch
+                    es, ee, ev = es[m], ee[m], ev[m]
+                if len(es):
+                    piece_s.append(es)
+                    piece_e.append(ee)
+                    piece_ep.append(ev)
+                    piece_ai.append(np.full(len(es), i, np.int64))
+        if not piece_s:
+            return
+        S = np.concatenate(piece_s)
+        E = np.concatenate(piece_e)
+        EP = np.concatenate(piece_ep)
+        AI = np.concatenate(piece_ai)
+        # stable sort of epoch-uniform pieces == the dense per-page stable
+        # argsort (pieces were built in (alloc, page) insertion order)
+        order = np.argsort(EP, kind="stable")
+        S, E, AI = S[order], E[order], AI[order]
+        ps_of = np.array([c.table.page_size for c in cands], np.int64)
+        np_of = np.array([c.table.num_pages for c in cands], np.int64)
+        tb_of = np.array([c.table.tail_bytes for c in cands], np.int64)
+        sizes = (E - S) * ps_of[AI]
+        tailm = E == np_of[AI]
+        sizes[tailm] += tb_of[AI[tailm]] - ps_of[AI[tailm]]
+        csum = np.cumsum(sizes)
+        before = csum - sizes
+        take = before < need_bytes
+        S, E, AI = S[take], E[take], AI[take]
+        if len(S) == 0:
+            return
+        # boundary piece: victims are taken while the bytes freed *before*
+        # each page is < need — a page-count prefix of the piece
+        room = need_bytes - int(before[np.flatnonzero(take)[-1]])
+        psz = int(ps_of[AI[-1]])
+        k = min(int(E[-1] - S[-1]), -(-room // psz))
+        E[-1] = S[-1] + k
         tr = self.prof.traffic()
-        chosen_alloc = alloc_idx[chosen]
-        uniq, first = np.unique(chosen_alloc, return_index=True)
+        uniq, first = np.unique(AI, return_index=True)
         for ai in uniq[np.argsort(first)]:  # first-appearance (charge) order
             a = cands[int(ai)]
-            pages = page_idx[chosen[chosen_alloc == ai]]
+            m = AI == ai
+            s_list, e_list = S[m], E[m]
+            npages = int((e_list - s_list).sum())
             # clean pages are just unmapped; only dirty pages copy back
-            dirty = pages[a.table.dirty[pages]]
-            nbytes = int(a.table.page_bytes(dirty).sum()) if len(dirty) else 0
-            self._apply_delta(a.table.move_pages(pages, Tier.HOST))
-            a.table.dirty[pages] = False
-            self._charge(nbytes / self.hw.link_d2h + self.hw.migrate_per_page * len(pages))
+            nbytes = a.table.dirty_bytes(s_list, e_list)
+            self._apply_delta(a.table.move_runs(s_list, e_list, Tier.HOST))
+            a.table.clear_dirty(s_list, e_list)
+            self._charge(nbytes / self.hw.link_d2h + self.hw.migrate_per_page * npages)
             tr.migrated_out += nbytes
             tr.link_d2h += nbytes
 
-    def _migrate_in(self, a: Allocation, pages: np.ndarray) -> int:
-        """Move host-resident pages to device, evicting if managed. Returns bytes."""
+    def _prefix_fit_runs(self, t: BlockTable, starts: np.ndarray,
+                         ends: np.ndarray, budget: int):
+        """Largest page-prefix of the runs whose per-page byte cumsum stays
+        <= budget (the run analogue of ``pages[cumsum(sizes) <= budget]``)."""
+        sizes = t.span_bytes(starts, ends)
+        csum = np.cumsum(sizes)
+        nfull = int(np.searchsorted(csum, budget, "right"))
+        if nfull == len(starts):
+            return starts, ends
+        cb = int(csum[nfull - 1]) if nfull else 0
+        k = max(0, (budget - cb) // t.page_size)
+        if k == 0:
+            return starts[:nfull], ends[:nfull]
+        s = starts[:nfull + 1].copy()
+        e = ends[:nfull + 1].copy()
+        e[-1] = s[-1] + k
+        return s, e
+
+    def _migrate_in_runs(self, a: Allocation, starts, ends) -> int:
+        """Move the host-resident pages of the given ascending [s, e) spans
+        to the device, evicting if managed. Returns bytes migrated."""
         t = a.table
-        pages = pages[t.tier[pages] == int(Tier.HOST)]
-        if len(pages) == 0:
+        hs, he = [], []
+        for s0, e0 in zip(starts, ends):
+            rs, re_ = t.runs_of(Tier.HOST, int(s0), int(e0))
+            hs.append(rs)
+            he.append(re_)
+        if not hs:
             return 0
-        need = int(t.page_bytes(pages).sum())
+        hs = np.concatenate(hs)
+        he = np.concatenate(he)
+        if len(hs) == 0:
+            return 0
+        need = int(t.span_bytes(hs, he).sum())
         if need > self.device_free():
             if a.policy.kind == "managed":
                 self._evict_lru(need - self.device_free(), exclude=a)
             if need > self.device_free():
-                fit = np.cumsum(t.page_bytes(pages)) <= self.device_free()
-                pages = pages[fit]
-                need = int(t.page_bytes(pages).sum()) if len(pages) else 0
+                hs, he = self._prefix_fit_runs(t, hs, he, self.device_free())
+                if len(hs) == 0:
+                    return 0
+                need = int(t.span_bytes(hs, he).sum())
                 if need == 0:
                     return 0
-        self._apply_delta(t.move_pages(pages, Tier.DEVICE))
+        self._apply_delta(t.move_runs(hs, he, Tier.DEVICE))
         tr = self.prof.traffic()
         tr.migrated_in += need
         tr.link_h2d += need
-        self._charge(need / self.hw.link_h2d + self.hw.migrate_per_page * len(pages))
+        npages = int((he - hs).sum())
+        self._charge(need / self.hw.link_h2d + self.hw.migrate_per_page * npages)
         return need
+
+    def _counter_bump(self, a: Allocation, p0: int, p1: int, txn: int) -> None:
+        """Bump the GPU access counter by `txn` for every page of [p0, p1);
+        pages crossing the policy threshold go notification-pending."""
+        thr = a.policy.counter_threshold
+        cs, ce, cv = a.table.bump_counter(p0, p1, txn)
+        crossed = (cv < thr) & (cv + txn >= thr)
+        if crossed.any():
+            n_newly = int((ce[crossed] - cs[crossed]).sum())
+            for s0, e0 in zip(cs[crossed], ce[crossed]):
+                a.pending.set_range(int(s0), int(e0), 1)
+            a.pending_count += n_newly
+            self.prof.traffic().notifications += n_newly
 
     # ---------------------------------------------------------------- kernel
     def kernel(self, *, reads: Sequence[Range] = (), writes: Sequence[Range] = (),
@@ -398,68 +478,68 @@ class UnifiedMemory:
                     # when the touched working set cannot fit even after
                     # evicting every other managed page, the driver stops
                     # migrating and serves remote reads (paper §7 Fig. 12)
-                    host_mask = t.tier[p0:p1] == int(Tier.HOST)
-                    n_host = int(np.count_nonzero(host_mask))
-                    if n_host:
-                        ws = t._mask_bytes(p0, p1, host_mask)
+                    hs, he = t.runs_of(Tier.HOST, p0, p1)
+                    if len(hs):
+                        ws = int(t.span_bytes(hs, he).sum())
                         evictable = sum(
                             o.table.resident_bytes(Tier.DEVICE)
                             for o in self.allocs.values()
                             if o is not a and not o.freed and o.table is not None
                             and o.policy.kind == "managed")
                         thrashing = ws > self.device_free() + evictable
-                    if n_host and not thrashing:
+                    if len(hs) and not thrashing:
                         gran_pages = max(1, a.policy.migration_granule // t.page_size)
-                        host_pages = p0 + np.flatnonzero(host_mask)
-                        granules = np.unique(host_pages // gran_pages)
-                        nfaults = len(granules)
+                        # faulting granules: the host runs projected onto
+                        # granule space (overlaps/adjacency merged)
+                        gs, ge = union_runs(hs // gran_pages,
+                                            (he - 1) // gran_pages + 1)
+                        nfaults = int((ge - gs).sum())
                         tr.faults += nfaults
                         self._charge(self.hw.page_fault_cost * nfaults)
                         # speculative prefetch: each faulting granule drags in
-                        # the next `pf` granules — expand the granule set and
-                        # explode to pages fully vectorized
+                        # the next `pf` granules — expand the granule runs and
+                        # clip to the table
                         pf = a.policy.speculative_prefetch
-                        gall = np.unique(
-                            (granules[:, None] + np.arange(pf)).ravel())
-                        gall = gall[gall <= t.num_pages // gran_pages]
-                        mig = (gall[:, None] * gran_pages
-                               + np.arange(gran_pages)).ravel()
-                        self._migrate_in(a, mig[mig < t.num_pages])
+                        if pf > 0:
+                            gs, ge = union_runs(gs, ge + pf - 1)
+                            gmax = t.num_pages // gran_pages + 1
+                            ge = np.minimum(ge, gmax)
+                            keep = gs < ge
+                            ms = gs[keep] * gran_pages
+                            me = np.minimum(ge[keep] * gran_pages, t.num_pages)
+                            self._migrate_in_runs(a, ms, me)
                 elif a.policy.kind == "managed" and actor is Actor.CPU:
-                    dev_mask = t.tier[p0:p1] == int(Tier.DEVICE)
-                    n_dev = int(np.count_nonzero(dev_mask))
-                    if n_dev:
+                    ds_, de_ = t.runs_of(Tier.DEVICE, p0, p1)
+                    if len(ds_):
+                        n_dev = int((de_ - ds_).sum())
                         gran_pages = max(1, a.policy.migration_granule // t.page_size)
-                        dev_pages = p0 + np.flatnonzero(dev_mask)
-                        granules = np.unique(dev_pages // gran_pages)
-                        tr.faults += len(granules)
-                        self._charge(self.hw.page_fault_cost * len(granules))
-                        nbytes = t._mask_bytes(p0, p1, dev_mask)
-                        self._apply_delta(t.move_pages(dev_pages, Tier.HOST))
+                        gs, ge = union_runs(ds_ // gran_pages,
+                                            (de_ - 1) // gran_pages + 1)
+                        nfaults = int((ge - gs).sum())
+                        tr.faults += nfaults
+                        self._charge(self.hw.page_fault_cost * nfaults)
+                        nbytes = int(t.span_bytes(ds_, de_).sum())
+                        self._apply_delta(t.move_runs(ds_, de_, Tier.HOST))
                         tr.migrated_out += nbytes
                         tr.link_d2h += nbytes
                         self._charge(nbytes / self.hw.link_d2h
                                      + self.hw.migrate_per_page * n_dev)
 
-                # account access traffic against current residency
-                on_dev = t.tier[p0:p1] == int(Tier.DEVICE)
-                n_dev_pages = int(np.count_nonzero(on_dev))
-                if n_dev_pages in (0, p1 - p0):
-                    # extent fully resident on one tier: the clipped page-byte
-                    # sum telescopes to hi - lo (minus the tail-page clip the
-                    # dense path applies when the final partial page is hit)
-                    tot = float(hi - lo)
-                    if p1 == t.num_pages and p1 * t.page_size > hi:
-                        tot -= t.page_size - t.tail_bytes
-                    dev_b, host_b = ((tot, 0.0) if n_dev_pages else (0.0, tot))
+                # account access traffic against current residency: per-run
+                # clipped bytes (boundary pages clip to [lo, hi); exact ints,
+                # so the float sum is order-independent and bit-identical to
+                # the dense per-page path)
+                rs, re_, rv = t.tier_runs(p0, p1)
+                dm = rv == int(Tier.DEVICE)
+                if len(rs) == 1:  # extent fully resident on one tier
+                    tot = float(t.clipped_extent_bytes(p0, p1, lo, hi))
+                    dev_b, host_b = (tot, 0.0) if dm[0] else (0.0, tot)
                 else:
-                    pb = t.page_bytes_slice(p0, p1).astype(np.float64)
-                    # clip to the actual [lo,hi) range on the boundary pages
-                    pb[0] -= lo - p0 * t.page_size
-                    if p1 * t.page_size > hi:
-                        pb[-1] -= p1 * t.page_size - hi
-                    dev_b = float(pb[on_dev].sum())
-                    host_b = float(pb[~on_dev].sum())
+                    rb = t.span_bytes(rs, re_).astype(np.float64)
+                    rb[0] = t.clipped_extent_bytes(int(rs[0]), int(re_[0]), lo, hi)
+                    rb[-1] = t.clipped_extent_bytes(int(rs[-1]), int(re_[-1]), lo, hi)
+                    dev_b = float(rb[dm].sum())
+                    host_b = float(rb[~dm].sum())
                 if actor is Actor.GPU:
                     local_bytes += dev_b
                     tr.device_local += int(dev_b)
@@ -476,21 +556,19 @@ class UnifiedMemory:
                         tr.link_h2d += int(host_b)
                         tr.remote_h2d += int(host_b)
                     if a.policy.kind == "system" and a.policy.auto_migrate and host_b:
-                        host_mask = ~on_dev
-                        sizes = t.page_bytes_slice(p0, p1)[host_mask]
-                        txn = np.maximum(1, sizes // self.hw.remote_access_grain
-                                         ).astype(np.int32)
-                        gc = t.gpu_counter[p0:p1]
-                        before = gc[host_mask]
-                        gc[host_mask] = before + txn
-                        crossed = (before < a.policy.counter_threshold) & (
-                            before + txn >= a.policy.counter_threshold)
-                        n_newly = int(np.count_nonzero(crossed))
-                        if n_newly:
-                            newly = p0 + np.flatnonzero(host_mask)[crossed]
-                            a.pending[newly] = True
-                            a.pending_count += n_newly
-                            tr.notifications += n_newly
+                        # remote-access counters: one bump per host run; the
+                        # (possibly partial) tail page has its own txn count
+                        grain = self.hw.remote_access_grain
+                        txn_full = max(1, t.page_size // grain)
+                        txn_tail = max(1, t.tail_bytes // grain)
+                        for s0, e0 in zip(rs[~dm], re_[~dm]):
+                            s0, e0 = int(s0), int(e0)
+                            if e0 == t.num_pages and txn_tail != txn_full:
+                                if e0 - 1 > s0:
+                                    self._counter_bump(a, s0, e0 - 1, txn_full)
+                                self._counter_bump(a, e0 - 1, e0, txn_tail)
+                            else:
+                                self._counter_bump(a, s0, e0, txn_full)
                 else:
                     local_bytes += host_b
                     tr.host_local += int(host_b)
@@ -514,7 +592,12 @@ class UnifiedMemory:
 
     # ------------------------------------------------------------- sync/misc
     def sync(self) -> float:
-        """cudaDeviceSynchronize analogue: apply pending delayed migrations."""
+        """cudaDeviceSynchronize analogue: apply pending delayed migrations.
+
+        The notification-pending state is drained as runs: pending runs are
+        intersected with the host-tier runs, the per-sync migration budget
+        takes a page-prefix of the result, and the migrated runs are cleared
+        from the pending map — O(runs), never O(pages)."""
         t0 = self.clock
         if self._pending_overlap:  # flush un-overlapped async prefetches
             self._charge(self._pending_overlap)
@@ -524,19 +607,27 @@ class UnifiedMemory:
                 continue
             if not a.policy.auto_migrate or a.pending is None:
                 continue
-            if a.pending_count == 0:  # invariant: count 0 <=> all False
+            if a.pending_count == 0:  # invariant: count 0 <=> no pending runs
                 continue
-            pages = np.nonzero(a.pending & (a.table.tier == int(Tier.HOST)))[0]
-            if len(pages) == 0:
-                a.pending[:] = False
+            t = a.table
+            ps_, pe_ = a.pending.nonzero_runs()
+            hs, he = [], []
+            for s0, e0 in zip(ps_, pe_):
+                rs, re_ = t.runs_of(Tier.HOST, int(s0), int(e0))
+                hs.append(rs)
+                he.append(re_)
+            hs = np.concatenate(hs) if hs else np.empty(0, np.int64)
+            he = np.concatenate(he) if he else np.empty(0, np.int64)
+            if len(hs) == 0:
+                a.pending.clear()
                 a.pending_count = 0
                 continue
             budget = a.policy.max_migration_bytes_per_sync
-            sizes = a.table.page_bytes(pages)
-            keep = np.cumsum(sizes) <= budget
-            self._migrate_in(a, pages[keep])
-            a.pending[pages[keep]] = False
-            a.pending_count -= int(np.count_nonzero(keep))
+            ks, ke = self._prefix_fit_runs(t, hs, he, budget)
+            self._migrate_in_runs(a, ks, ke)
+            for s0, e0 in zip(ks, ke):
+                a.pending.set_range(int(s0), int(e0), 0)
+            a.pending_count -= int((ke - ks).sum())
         self._sample()
         return self.clock - t0
 
@@ -567,17 +658,16 @@ class UnifiedMemory:
         assert a.table is not None, "prefetch needs a paged allocation"
         p0, p1 = a.table.page_range(lo, hi)
         self._first_touch(a, p0, p1, Actor.CPU)
-        pages = np.arange(p0, p1)
         if overlap:
             saved = self.clock
-            self._migrate_in(a, pages)
+            self._migrate_in_runs(a, (p0,), (p1,))
             self._pending_overlap += self.clock - saved
             # roll the clock back: the cost is deferred to the next kernel
             dt = self.clock - saved
             self.clock = saved
             self.prof.charge(-dt)
         else:
-            self._migrate_in(a, pages)
+            self._migrate_in_runs(a, (p0,), (p1,))
         self._sample()
         return self.clock - t0
 
@@ -612,18 +702,19 @@ class UnifiedMemory:
             # the caller is explicitly cold-marking this range: drop any
             # pending migration notifications so the next sync() doesn't
             # promote the just-demoted pages straight back to the device
-            a.pending_count -= int(np.count_nonzero(a.pending[p0:p1]))
-            a.pending[p0:p1] = False
-        pages = p0 + np.flatnonzero(t.tier[p0:p1] == int(Tier.DEVICE))
-        if len(pages):
-            nbytes = int(t.page_bytes(pages).sum())
-            self._apply_delta(t.move_pages(pages, Tier.HOST))
-            t.dirty[pages] = False
+            a.pending_count -= a.pending.count_nonzero(p0, p1)
+            a.pending.set_range(p0, p1, 0)
+        ds_, de_ = t.runs_of(Tier.DEVICE, p0, p1)
+        if len(ds_):
+            nbytes = int(t.span_bytes(ds_, de_).sum())
+            npages = int((de_ - ds_).sum())
+            self._apply_delta(t.move_runs(ds_, de_, Tier.HOST))
+            t.clear_dirty(ds_, de_)
             tr = self.prof.traffic()
             tr.migrated_out += nbytes
             tr.link_d2h += nbytes
             self._charge(nbytes / self.hw.link_d2h
-                         + self.hw.migrate_per_page * len(pages))
+                         + self.hw.migrate_per_page * npages)
         self._sample()
         return self.clock - t0
 

@@ -101,12 +101,18 @@ class PagedKVCache:
 
     # ------------------------------------------------------- page accounting
     def alloc_range(self, sid: int, start: int, end: int) -> None:
-        """Ensure pages backing positions [start, end) are allocated."""
+        """Ensure pages backing positions [start, end) are allocated.
+
+        Vectorized: all holes fill from the free stack in one shot, in the
+        exact order sequential pop() calls would have used (so pool page ids
+        — and therefore the umem pool's run layout — are unchanged)."""
         j0, j1 = start // self.page_size, -(-end // self.page_size)
-        for j in range(j0, j1):
-            if self.page_table[sid, j] == 0:
-                assert self._free, "page pool exhausted"
-                self.page_table[sid, j] = self._free.pop()
+        row = self.page_table[sid, j0:j1]
+        holes = np.flatnonzero(row == 0)
+        if len(holes):
+            assert len(self._free) >= len(holes), "page pool exhausted"
+            row[holes] = self._free[:-len(holes) - 1:-1]
+            del self._free[-len(holes):]
 
     def missing_pages(self, sid: int, end: int) -> int:
         """Pages still unallocated among those backing positions [0, end)."""

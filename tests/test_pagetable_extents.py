@@ -74,6 +74,89 @@ def test_touch_range_sets_epoch_and_dirty():
     assert t.dirty[4:8].all() and not t.dirty[:4].any()
 
 
+def test_clipped_extent_bytes_interior():
+    """Exact-page boundaries and interior clips on full-size pages."""
+    t = BlockTable("x", 64 * KB, 4 * KB)  # 16 full pages, no partial tail
+    # exact-page boundaries: no clip
+    assert t.clipped_extent_bytes(0, 16, 0, 64 * KB) == 64 * KB
+    assert t.clipped_extent_bytes(2, 5, 8 * KB, 20 * KB) == 12 * KB
+    # head clip only
+    assert t.clipped_extent_bytes(0, 2, 1 * KB, 8 * KB) == 7 * KB
+    # tail clip only
+    assert t.clipped_extent_bytes(0, 2, 0, 7 * KB) == 7 * KB
+    # both clips, single-page extent
+    assert t.clipped_extent_bytes(3, 4, 13 * KB, 15 * KB) == 2 * KB
+    # sub-run of a larger extent: only its own boundary is clipped
+    assert t.clipped_extent_bytes(1, 3, 2 * KB, 30 * KB) == 8 * KB
+
+
+def test_clipped_extent_bytes_tail_page_quirk():
+    """The historical dense math applies the full-page overhang clip to the
+    *partial* tail page, under-counting it by (page_size - tail_bytes) —
+    pinned by the golden parity fixture, so the helper must reproduce it."""
+    t = BlockTable("x", 10 * KB, 4 * KB)  # 3 pages, tail = 2 KB
+    # extent ending exactly at nbytes: the tail page contributes
+    # tail_bytes - (page_size - tail_bytes) = 0 KB, not 2 KB
+    assert t.clipped_extent_bytes(0, 3, 0, 10 * KB) == 8 * KB
+    # single-page extent on the tail page alone
+    assert t.clipped_extent_bytes(2, 3, 8 * KB, 10 * KB) == 0
+    # stopping mid-tail goes negative (dense pb[-1] did too)
+    assert t.clipped_extent_bytes(2, 3, 8 * KB, 9 * KB) == -1 * KB
+    # extents not touching the tail page are unaffected
+    assert t.clipped_extent_bytes(0, 2, 0, 8 * KB) == 8 * KB
+
+
+def test_tier_runs_vals_are_read_only():
+    """Mutating tier state through the run view would bypass the cached
+    residency counters — the returned tiers array must refuse writes."""
+    t = BlockTable("x", 64 * KB, 4 * KB)
+    t.map_mask(0, 16, np.ones(16, bool), Tier.HOST)
+    _, _, v = t.tier_runs()
+    with np.testing.assert_raises(ValueError):
+        v[0] = int(Tier.DEVICE)
+    assert t.resident_bytes(Tier.HOST) == 64 * KB
+
+
+def test_runs_of_and_unmapped_stats():
+    t = BlockTable("x", 64 * KB, 4 * KB)
+    t.map_mask(0, 16, np.ones(16, bool), Tier.HOST)
+    t.move_pages(np.arange(4, 8), Tier.DEVICE)
+    s, e = t.runs_of(Tier.HOST)
+    assert list(zip(s.tolist(), e.tolist())) == [(0, 4), (8, 16)]
+    s, e = t.runs_of(Tier.DEVICE, 0, 6)
+    assert list(zip(s.tolist(), e.tolist())) == [(4, 6)]
+    assert t.unmapped_stats(0, 16) == (0, 0)
+    t2 = BlockTable("y", 64 * KB, 4 * KB)
+    t2.map_mask(0, 16, np.arange(16) < 4, Tier.HOST)
+    assert t2.unmapped_stats(0, 16) == (12, 48 * KB)
+    assert t2.unmapped_stats(0, 4) == (0, 0)
+
+
+def test_move_runs_accounting_and_counter_reset():
+    t = BlockTable("x", 64 * KB, 4 * KB)
+    t.map_mask(0, 16, np.ones(16, bool), Tier.HOST)
+    t._gpu_counter.set_range(0, 16, 99)
+    dh, dd = t.move_runs([2, 10], [5, 12], Tier.DEVICE)
+    assert (dh, dd) == (-20 * KB, 20 * KB)
+    assert t.resident_bytes(Tier.DEVICE) == 20 * KB
+    assert (t.gpu_counter[2:5] == 0).all() and (t.gpu_counter[10:12] == 0).all()
+    assert (t.gpu_counter[:2] == 99).all()
+    # cached counters agree with the run-structure recount
+    pages, nbytes = t.recount()
+    assert (pages == t._tier_pages).all() and (nbytes == t._tier_bytes).all()
+
+
+def test_metadata_stays_o_fragmentation():
+    """A 4 GiB table at 4 KB pages (1M PTEs) carries only O(runs) metadata."""
+    t = BlockTable("x", 4 * 1024 * MB, 4 * KB)
+    assert t.num_pages == 1024 * 1024
+    base = t.metadata_nbytes()
+    assert base < 512  # four single-run maps
+    t.map_unmapped(0, t.num_pages, Tier.HOST)
+    t.move_extent(1000, 2000, Tier.DEVICE)
+    assert t.metadata_nbytes() < base + 256
+
+
 def test_kernel_epoch_batching_in_paged_kv_touch():
     """PagedKVCache._touch batches a sequence's pages into ONE kernel call."""
     from repro.serve.paged import PagedKVCache

@@ -1,0 +1,142 @@
+"""Unit tests for the run-compressed interval map (core/runs.py) — the
+primary metadata structure of the page table after the run-compression
+refactor. The dense reference for every operation is a plain numpy array."""
+import numpy as np
+import pytest
+
+from repro.core import RunMap, union_runs
+
+
+def test_initial_state_single_run():
+    m = RunMap(1000, fill=7, dtype=np.int8)
+    assert m.num_runs == 1
+    assert m.value_at(0) == 7 and m.value_at(999) == 7
+    s, e, v = m.runs()
+    assert s.tolist() == [0] and e.tolist() == [1000] and v.tolist() == [7]
+    m.check()
+
+
+def test_set_range_splits_and_coalesces():
+    m = RunMap(16, fill=0)
+    m.set_range(4, 8, 5)
+    assert m.to_dense().tolist() == [0] * 4 + [5] * 4 + [0] * 8
+    m.check()
+    # re-setting the same value is a no-op on the structure
+    m.set_range(5, 7, 5)
+    assert m.num_runs == 3
+    # filling the gap coalesces back to one run
+    m.set_range(4, 8, 0)
+    assert m.num_runs == 1
+    m.check()
+
+
+def test_set_range_seams_coalesce_with_neighbors():
+    m = RunMap(10, fill=0)
+    m.set_range(0, 3, 1)
+    m.set_range(3, 6, 1)  # extends the left neighbor
+    assert m.num_runs == 2
+    assert m.to_dense().tolist() == [1] * 6 + [0] * 4
+    m.set_range(6, 10, 1)  # now uniform
+    assert m.num_runs == 1
+    m.check()
+
+
+def test_set_range_edges():
+    m = RunMap(8, fill=0)
+    m.set_range(0, 8, 3)  # whole map
+    assert m.num_runs == 1 and m.value_at(4) == 3
+    m.set_range(7, 8, 9)  # last page only
+    m.set_range(0, 1, 9)  # first page only
+    assert m.to_dense().tolist() == [9, 3, 3, 3, 3, 3, 3, 9]
+    m.set_range(2, 2, 1)  # empty range: no-op
+    assert m.num_runs == 3
+    m.check()
+
+
+def test_runs_window_clipping():
+    m = RunMap(20, fill=0)
+    m.set_range(5, 10, 1)
+    m.set_range(10, 15, 2)
+    s, e, v = m.runs(7, 12)
+    assert s.tolist() == [7, 10]
+    assert e.tolist() == [10, 12]
+    assert v.tolist() == [1, 2]
+
+
+def test_add_range_matches_dense():
+    rng = np.random.default_rng(0)
+    m = RunMap(64, fill=0)
+    dense = np.zeros(64, np.int64)
+    for _ in range(200):
+        p0, p1 = sorted(rng.integers(0, 65, 2).tolist())
+        d = int(rng.integers(1, 5))
+        m.add_range(p0, p1, d)
+        dense[p0:p1] += d
+        m.check()
+    assert (m.to_dense() == dense).all()
+
+
+def test_set_range_fuzz_matches_dense():
+    rng = np.random.default_rng(1)
+    m = RunMap(97, fill=-1, dtype=np.int8)
+    dense = np.full(97, -1, np.int8)
+    for _ in range(300):
+        p0, p1 = sorted(rng.integers(0, 98, 2).tolist())
+        val = int(rng.integers(-1, 3))
+        m.set_range(p0, p1, val)
+        dense[p0:p1] = val
+        m.check()
+    assert (m.to_dense() == dense).all()
+
+
+def test_from_dense_round_trip():
+    dense = np.array([0, 0, 1, 1, 1, 0, 2, 2, 0, 0], np.int64)
+    m = RunMap.from_dense(dense)
+    m.check()
+    assert (m.to_dense() == dense).all()
+    assert m.num_runs == 5
+
+
+def test_nonzero_runs_and_counts():
+    m = RunMap(12, fill=0, dtype=np.int8)
+    m.set_range(1, 3, 1)
+    m.set_range(7, 11, 1)
+    s, e = m.nonzero_runs()
+    assert list(zip(s.tolist(), e.tolist())) == [(1, 3), (7, 11)]
+    assert m.count_nonzero() == 6
+    assert m.count_nonzero(2, 8) == 2
+    assert m.any()
+    m.clear()
+    assert not m.any() and m.num_runs == 1
+
+
+def test_bytes_used_is_o_runs_not_o_pages():
+    small = RunMap(16, fill=0)
+    big = RunMap(1 << 24, fill=0)  # 16M pages
+    assert big.bytes_used() == small.bytes_used()
+    big.set_range(5, 100, 1)
+    assert big.bytes_used() < 200  # 3 runs
+
+
+def test_union_runs_merges_overlap_and_adjacency():
+    s = np.array([0, 2, 10, 11], np.int64)
+    e = np.array([3, 5, 11, 20], np.int64)
+    us, ue = union_runs(s, e)
+    assert us.tolist() == [0, 10]
+    assert ue.tolist() == [5, 20]
+
+
+def test_splice_preserves_dtype():
+    m = RunMap(8, fill=0, dtype=np.int8)
+    m.set_range(2, 4, 1)
+    assert m.vals.dtype == np.int8
+    m.add_range(0, 8, 1)
+    assert m.vals.dtype == np.int8
+
+
+@pytest.mark.parametrize("n", [1, 2, 7])
+def test_tiny_maps(n):
+    m = RunMap(n, fill=0)
+    m.set_range(0, n, 4)
+    assert m.to_dense().tolist() == [4] * n
+    m.check()

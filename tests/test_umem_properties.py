@@ -103,6 +103,86 @@ def test_oversubscription_policies(ratio):
     assert um.device_bytes() <= cap
 
 
+op_st = st.tuples(
+    st.sampled_from(["kernel_r_gpu", "kernel_w_gpu", "kernel_r_cpu",
+                     "kernel_w_cpu", "prefetch", "demote", "sync", "free"]),
+    st.integers(0, 2),  # which allocation
+    st.floats(0, 1), st.floats(0, 1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    page_kb=st.sampled_from([4, 64]),
+    sizes=st.lists(st.integers(1, 2 * MB), min_size=3, max_size=3),
+    kinds=st.lists(st.sampled_from(["system", "managed"]), min_size=3,
+                   max_size=3),
+    cap_mb=st.integers(1, 4),
+    ops=st.lists(op_st, min_size=1, max_size=25),
+)
+def test_randomized_ops_residency_and_run_dense_roundtrip(
+        page_kb, sizes, kinds, cap_mb, ops):
+    """Drive randomized op sequences (kernel/prefetch/demote/evict-under-
+    pressure/free/sync) and assert after every op that
+
+      * the runtime's cached _host_bytes/_device_bytes equal the slow-path
+        _recompute_residency() re-derived from the run structures,
+      * each table's cached per-tier counters equal its recount(),
+      * the run-compressed tier state round-trips to the dense per-page
+        materialization page-for-page (from_dense(to_dense) == state).
+    """
+    import dataclasses
+
+    from repro.core import GRACE_HOPPER, RunMap
+
+    hw = dataclasses.replace(GRACE_HOPPER,
+                             device_capacity=cap_mb * MB)  # eviction pressure
+    um = UnifiedMemory(hw=hw)
+    allocs = []
+    for i, (nbytes, kind) in enumerate(zip(sizes, kinds)):
+        pol = (system_policy(page_kb * KB) if kind == "system"
+               else managed_policy(page_kb * KB))
+        allocs.append(um.alloc(f"a{i}", nbytes, pol))
+
+    def check():
+        assert (um.host_bytes(), um.device_bytes()) == um._recompute_residency()
+        assert um.device_bytes() <= um.hw.device_capacity
+        for a in allocs:
+            if a.freed:
+                continue
+            pages, nbytes = a.table.recount()
+            assert (pages == a.table._tier_pages).all()
+            assert (nbytes == a.table._tier_bytes).all()
+            for m in (a.table._tier, a.table._epoch, a.table._dirty,
+                      a.table._gpu_counter, a.pending):
+                m.check()
+                rt = RunMap.from_dense(m.to_dense())
+                assert (rt.starts == m.starts).all()
+                assert (rt.vals == m.vals).all()
+
+    for op, ai, f0, f1 in ops:
+        a = allocs[ai]
+        if a.freed:
+            continue
+        lo, hi = sorted((int(f0 * a.nbytes), int(f1 * a.nbytes)))
+        if op == "free":
+            um.free(a)
+        elif op == "sync":
+            um.sync()
+        elif op == "prefetch":
+            um.prefetch(a, lo, hi)
+        elif op == "demote":
+            um.demote(a, lo, hi)
+        elif lo < hi:
+            actor = Actor.GPU if op.endswith("gpu") else Actor.CPU
+            key = "writes" if "_w_" in op else "reads"
+            um.kernel(**{key: [(a, lo, hi)]}, actor=actor)
+        check()
+    for a in allocs:
+        if not a.freed:
+            um.free(a)
+    assert um._recompute_residency() == (um.host_bytes(), um.device_bytes())
+
+
 def test_gpu_first_touch_cost_page_size():
     """§5.1.2/§5.2: GPU-first-touch PTE init is ~page-count bound — 64KB pages
     cut init time ~16x vs 4KB."""

@@ -21,8 +21,16 @@ def json_dir() -> Path:
     return Path(os.environ.get("BENCH_JSON_DIR", "."))
 
 
-def write_json(module: str, results: dict) -> Path:
-    """Write a benchmark module's results as BENCH_<module>.json."""
+def write_json(module: str, results: dict, *, hardware: str = "",
+               policies=()) -> Path:
+    """Write a benchmark module's results as BENCH_<module>.json.
+
+    ``hardware`` (HardwareModel name) and ``policies`` (the policy kinds the
+    module exercised) land under a ``_meta`` key, so the cross-PR perf
+    trajectory stays attributable when runs switch memory backends."""
     path = json_dir() / f"BENCH_{module}.json"
-    path.write_text(json.dumps(results, indent=1, sort_keys=True) + "\n")
+    out = dict(results)
+    out["_meta"] = {"hardware": hardware,
+                    "policies": sorted(set(policies))}
+    path.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
     return path

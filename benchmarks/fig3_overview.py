@@ -1,16 +1,31 @@
 """Fig. 3: relative performance of system/managed vs explicit, six apps.
 
 Sizes come from each app's AppSpec "fig3" preset — the same configurations
-scripts/check_parity.py pins bit-identical across refactors."""
+scripts/check_parity.py pins bit-identical across refactors.
+
+``run(policy=..., hw=...)`` swaps the whole suite onto one registered
+memory-policy backend / hardware model (benchmarks/run.py --policy/--hw):
+every app runs end-to-end under that backend and raw times are emitted
+(no explicit-baseline speedup — the baseline belongs to the paper's
+three-way Grace Hopper comparison, not to an arbitrary backend).
+"""
 from repro.apps import APPS
+from repro.core import get_hardware
 
 from benchmarks.common import emit
 
 
-def run():
+def run(policy=None, hw=None):
+    hw_name = get_hardware(hw).name
+    pols = ("managed", "system") if policy is None else (policy,)
     for app, spec in APPS.items():
         kw = spec.sizes["fig3"]
-        base = spec.run("explicit", **kw).time_excluding_cpu_init()
-        for pol in ("managed", "system"):
-            t = spec.run(pol, **kw).time_excluding_cpu_init()
-            emit(f"fig3/{app}/{pol}", t * 1e6, f"speedup_vs_explicit={base / t:.3f}")
+        base = (spec.run("explicit", hw=hw, **kw).time_excluding_cpu_init()
+                if policy is None else None)
+        for pol in pols:
+            t = spec.run(pol, hw=hw, **kw).time_excluding_cpu_init()
+            derived = (f"speedup_vs_explicit={base / t:.3f}"
+                       if base is not None else "")
+            if hw is not None:  # overridden hardware must label its rows
+                derived += (";" if derived else "") + f"hw={hw_name}"
+            emit(f"fig3/{app}/{pol}", t * 1e6, derived)

@@ -3,8 +3,18 @@
 Exits non-zero if ANY module fails, so CI smoke runs can gate on it.
 ``--json [DIR]`` directs modules that support it (sim_throughput) to write
 their BENCH_<module>.json snapshots into DIR (default: cwd).
+
+``--policy NAME`` / ``--hw NAME`` run the figure suites under a registered
+memory-policy backend / hardware model (see repro.core.registry), e.g.
+
+    python benchmarks/run.py --policy mi300a_unified --hw mi300a
+
+Only modules whose ``run()`` accepts the overrides participate (currently
+the AppSpec-driven fig3 suite); the others are skipped with a note, since
+silently running them on the default backend would mislabel the results.
 """
 import importlib
+import inspect
 import os
 import sys
 import traceback
@@ -26,22 +36,55 @@ MODULES = [
 ]
 
 
+def _pop_value_flag(argv: list, flag: str):
+    """Remove ``flag VALUE`` from argv and return VALUE (or None)."""
+    if flag not in argv:
+        return None
+    i = argv.index(flag)
+    argv.pop(i)
+    if i >= len(argv) or argv[i].startswith("-"):
+        print(f"benchmarks/run.py: {flag} needs a value", file=sys.stderr)
+        raise SystemExit(2)
+    return argv.pop(i)
+
+
 def main(argv=None) -> int:
     """Run all (or the named) benchmark modules; return a shell exit code."""
     argv = list(argv) if argv else []
+    # value-taking flags first, so --json's optional-DIR sniffing below can
+    # never swallow them as its directory argument
+    policy = _pop_value_flag(argv, "--policy")
+    hw = _pop_value_flag(argv, "--hw")
     if "--json" in argv:
         i = argv.index("--json")
         argv.pop(i)
-        if i < len(argv) and not argv[i].startswith("benchmarks."):
+        if (i < len(argv) and not argv[i].startswith("benchmarks.")
+                and not argv[i].startswith("-")):
             os.environ["BENCH_JSON_DIR"] = argv.pop(i)
         else:
             os.environ.setdefault("BENCH_JSON_DIR", ".")
+    overrides = {}
+    if policy is not None:
+        overrides["policy"] = policy
+    if hw is not None:
+        overrides["hw"] = hw
     names = argv if argv else MODULES
     header()
     failed = []
     for m in names:
         try:
-            importlib.import_module(m).run()
+            run = importlib.import_module(m).run
+            if overrides:
+                params = inspect.signature(run).parameters
+                var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                             for p in params.values())
+                if not var_kw and not all(k in params for k in overrides):
+                    print(f"# {m}: skipped (run() takes no "
+                          f"{'/'.join(overrides)} overrides)", file=sys.stderr)
+                    continue
+                run(**overrides)
+            else:
+                run()
         except Exception:
             failed.append(m)
             traceback.print_exc()

@@ -31,7 +31,8 @@ import os
 import sys
 import time
 
-from repro.core import Actor, UnifiedMemory, explicit_policy, managed_policy, system_policy
+from repro.core import (GRACE_HOPPER, Actor, UnifiedMemory, explicit_policy,
+                        managed_policy, system_policy)
 
 from benchmarks.common import emit, write_json
 
@@ -127,7 +128,8 @@ def run() -> None:
         _record(results, f"evict/{label}", dt, eops, pages, meta)
     dt, pages, meta = _stream(4 * KB, ops, nbytes=HUGE_NBYTES)
     _record(results, "huge/4KB", dt, ops, pages, meta)
-    write_json("simthroughput", results)
+    write_json("simthroughput", results, hardware=GRACE_HOPPER.name,
+               policies=("system", "managed", "explicit"))
     _check_floors(results)
 
 

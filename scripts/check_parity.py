@@ -49,6 +49,15 @@ def configs():
                             oversub_ratio=ratio, page_size=4 * KB))
 
 
+def select_configs(only: str = "", policies=()):
+    """Filter the parity configs by key prefix and/or policy subset —
+    ``--policies system,managed`` lets a contributor re-verify a single
+    ported backend without paying for the full 66-config run."""
+    pols = set(policies)
+    return [(k, n, p, kw) for k, n, p, kw in configs()
+            if k.startswith(only) and (not pols or p in pols)]
+
+
 def run_config(name: str, pol: str, kw: dict) -> dict:
     return charge_snapshot(APPS[name].run(pol, **kw))
 
@@ -72,13 +81,16 @@ def main() -> int:
                     help="regenerate the fixture instead of verifying")
     ap.add_argument("--only", default="",
                     help="only run configs whose key starts with this prefix")
+    ap.add_argument("--policies", default="",
+                    help="comma-separated policy subset (e.g. system,managed)"
+                         " — re-verify one backend quickly")
     args = ap.parse_args()
 
-    todo = [(k, n, p, kw) for k, n, p, kw in configs()
-            if k.startswith(args.only)]
+    policies = tuple(p.strip() for p in args.policies.split(",") if p.strip())
+    todo = select_configs(args.only, policies)
     if not todo:
-        print(f"check_parity: no configs match prefix {args.only!r}",
-              file=sys.stderr)
+        print(f"check_parity: no configs match prefix {args.only!r} "
+              f"policies {policies!r}", file=sys.stderr)
         return 2
 
     fixture = {}
@@ -101,7 +113,7 @@ def main() -> int:
                 broken.extend(diff(key, snap, fixture[key]))
 
     if args.write:
-        if args.only:
+        if args.only or policies:  # subset regen must not drop the rest
             merged = json.loads(FIXTURE.read_text()) if FIXTURE.exists() else {}
             merged.update(out)
             out = merged

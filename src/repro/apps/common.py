@@ -28,13 +28,12 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Mapping
 
 from repro.core import (
-    GRACE_HOPPER,
     Actor,
     HardwareModel,
     UnifiedMemory,
     explicit_policy,
-    managed_policy,
-    system_policy,
+    get_hardware,
+    make_policy,
 )
 
 KB = 1024
@@ -77,10 +76,15 @@ class AppSpec:
 
 
 def make_um(policy_kind: str, *, page_size: int = 64 * KB,
-            hw: HardwareModel = GRACE_HOPPER, auto_migrate: bool = True,
+            hw: "HardwareModel | str | None" = None, auto_migrate: bool = True,
             oversub_ratio: float = 0.0, app_peak_bytes: int = 0,
             speculative_prefetch: int = 4, threshold: int = 256):
     """Build a UnifiedMemory + the policy for app buffers (+ballast if oversub).
+
+    ``policy_kind`` is resolved through the backend registry
+    (``repro.core.registry``), so any registered policy — including
+    out-of-tree backends — runs through the same app harness. ``hw`` may be
+    a HardwareModel, a registered hardware name, or None (grace-hopper).
 
     oversub_ratio R > 1 shrinks free device memory so that
     app_peak_bytes / free == R (the paper's simulated oversubscription).
@@ -88,6 +92,7 @@ def make_um(policy_kind: str, *, page_size: int = 64 * KB,
     explicit-version host staging buffers (um.from_host) are paged like the
     system-memory version instead of at a hard-wired 64 KB default.
     """
+    hw = get_hardware(hw)
     um = UnifiedMemory(hw=hw, staging_page_size=page_size)
     if oversub_ratio and oversub_ratio > 1.0:
         assert app_peak_bytes > 0
@@ -95,20 +100,16 @@ def make_um(policy_kind: str, *, page_size: int = 64 * KB,
         ballast = hw.device_capacity - target_free
         if ballast > 0:
             um.alloc("__ballast__", ballast, explicit_policy())
-    if policy_kind == "system":
-        pol = system_policy(page_size, auto_migrate=auto_migrate, threshold=threshold)
-    elif policy_kind == "managed":
-        pol = managed_policy(page_size, speculative_prefetch=speculative_prefetch)
-    elif policy_kind == "explicit":
-        pol = explicit_policy()
-    else:
-        raise ValueError(policy_kind)
+    pol = make_policy(policy_kind, page_size=page_size,
+                      auto_migrate=auto_migrate, threshold=threshold,
+                      speculative_prefetch=speculative_prefetch)
     return um, pol
 
 
 def finish(um: UnifiedMemory, name: str, policy_kind: str, page_size: int,
            checksum: float, **extra) -> AppResult:
     rep = um.report()
+    extra = dict(extra, hw=um.hw.name)
     return AppResult(
         name=name,
         policy=policy_kind,

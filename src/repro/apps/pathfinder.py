@@ -24,9 +24,10 @@ def _dp_all_rows(data):
 def run_pathfinder(policy_kind: str = "system", *, rows: int = 4096, cols: int = 1024,
                    page_size: int = 64 * KB, rows_per_kernel: int = 512,
                    oversub_ratio: float = 0.0, auto_migrate: bool = True,
-                   interpret: bool = True) -> AppResult:
+                   hw=None, interpret: bool = True) -> AppResult:
     row_bytes = cols * 4
-    um, pol = make_um(policy_kind, page_size=page_size, oversub_ratio=oversub_ratio,
+    um, pol = make_um(policy_kind, page_size=page_size, hw=hw,
+                      oversub_ratio=oversub_ratio,
                       app_peak_bytes=rows * row_bytes + 2 * row_bytes,
                       auto_migrate=auto_migrate)
 

@@ -53,11 +53,10 @@ class BufferView:
         return self.hi - self.lo
 
     def resolve(self, actor: Actor = Actor.GPU):
-        """Lower to the runtime Range: (Allocation, lo_byte, hi_byte)."""
-        a = self.buf.alloc
-        if actor is Actor.CPU and self.buf.host is not None:
-            a = self.buf.host
-        return (a, self.lo, self.hi)
+        """Lower to the runtime Range: (Allocation, lo_byte, hi_byte).
+        Routing is the policy's ``resolve_actor_side`` hook — the explicit
+        backend sends CPU actors to the malloc'd staging side of the pair."""
+        return self.buf.policy.resolve_actor_side(self, actor)
 
     def page_extent(self) -> Tuple[int, int]:
         """The [lo_page, hi_page) extent this view resolves to (paged

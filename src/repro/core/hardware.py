@@ -61,6 +61,30 @@ GRACE_HOPPER = HardwareModel(
     migrate_per_page=0.6e-6,
 )
 
+MI300A = HardwareModel(
+    # AMD MI300A APU: CPU (24 Zen 4 cores) and GPU (CDNA3) share one 128 GB
+    # HBM3 pool behind one page table ("Dissecting CPU-GPU Unified Physical
+    # Memory on AMD MI300A APUs"). Device/host/link bandwidths are the SAME
+    # physical memory — the Mi300aUnifiedPolicy never migrates, and the
+    # equal rates below make access cost uniform no matter which "side" a
+    # page's bookkeeping tier says it is on.
+    name="mi300a",
+    flops_rate=122.6e12,  # CDNA3 fp32 vector peak
+    device_bw=3.7e12,  # achieved HBM3 STREAM-class bandwidth (5.3 TB/s peak)
+    host_bw=3.7e12,  # CPU cores hit the same HBM3 pool
+    link_h2d=3.7e12,  # "link" = on-package Infinity Fabric to the same pool
+    link_d2h=3.7e12,
+    device_capacity=128 * 1024**3,  # the whole unified pool
+    remote_access_grain=128,
+    remote_efficiency=1.0,  # no fine-grain penalty: one physical memory
+    page_fault_cost=0.0,  # no fault-driven migration path exists
+    pte_init_cpu=0.3e-6,
+    pte_init_gpu=0.3e-6,  # shared page table: GPU first touch == CPU's
+    alloc_per_page=0.05e-6,
+    dealloc_per_page=0.3e-6,
+    migrate_per_page=0.0,  # nothing ever migrates
+)
+
 TPU_V5E = HardwareModel(
     name="tpu-v5e",
     flops_rate=197e12,  # bf16

@@ -1,13 +1,64 @@
-"""Memory-management policies: the paper's three allocation strategies.
+"""Memory-policy backends: pluggable strategies for the unified-memory runtime.
 
-system   -> system-allocated memory (malloc): single system page table,
+The paper's three allocation strategies — and any new memory system — are
+:class:`MemPolicy` objects. ``UnifiedMemory`` never branches on a policy
+name: every policy-dependent decision goes through an explicit lifecycle
+hook on the allocation's policy object.
+
+Built-in backends (the paper's comparison axis):
+
+system   -> :class:`SystemPolicy` (malloc): single system page table,
             direct remote access at fine granularity, access-counter-based
             *delayed* migration (threshold notifications, §2.2.1).
-managed  -> CUDA managed memory (cudaMallocManaged): fault-driven on-demand
-            migration at 2 MB granularity + speculative prefetch, LRU
-            eviction under device-capacity pressure (§2.3).
-explicit -> cudaMalloc + cudaMemcpy: device-resident, explicit copies, OOM on
-            oversubscription.
+managed  -> :class:`ManagedPolicy` (cudaMallocManaged): fault-driven
+            on-demand migration at 2 MB granularity + speculative prefetch,
+            LRU eviction under device-capacity pressure (§2.3).
+explicit -> :class:`ExplicitPolicy` (cudaMalloc + cudaMemcpy):
+            device-resident, explicit staged copies, OOM on oversubscription.
+
+plus one backend for a different memory system entirely:
+
+mi300a_unified -> :class:`Mi300aUnifiedPolicy`: AMD MI300A's single
+            *physical* pool (CPU and GPU share one HBM3 memory and one page
+            table). First touch maps, nothing ever migrates, nothing is
+            evicted, and access latency is uniform — oversubscribing the
+            pool is a genuine OOM. Pair with the ``MI300A`` HardwareModel.
+
+Hook reference (``um`` is the calling :class:`~repro.core.umem.UnifiedMemory`):
+
+==========================  ==================================================
+hook                        called when / must do
+==========================  ==================================================
+``on_alloc(um, name, n)``   build and charge the Allocation record
+``on_free(um, a)``          release residency, charge deallocation
+``make_staging(um, buf)``   from_host(): return a host staging Allocation
+                            (or None) for the cudaMalloc+malloc pair
+``on_first_touch(...)``     charge PTE creation for the unmapped pages of an
+                            extent and return the Tier they map to
+``on_access(...)``          pre-access migration (fault-driven paths); the
+                            return value is handed to charge_access as ctx
+``charge_access(...)``      classify the extent's resident bytes into
+                            (local, remote_h2d, remote_d2h, remote_slow)
+                            contributions and update traffic counters
+``on_pressure(um, a, n)``   a migration into a full device: evict (or not)
+``on_sync(um, a)``          sync point: drain batched/delayed migrations
+``resolve_actor_side(...)`` route a BufferView to the allocation an actor
+                            actually touches (explicit staging pairs)
+==========================  ==================================================
+
+Charge-accounting invariants every backend must keep (enforced for the
+built-ins by scripts/check_parity.py, and for every registered backend by
+tests/policy_contract.py):
+
+* alloc/free symmetry — freeing returns host/device residency to its
+  pre-alloc values;
+* the runtime's cached residency totals equal a full recount after any
+  op sequence (``UnifiedMemory._recompute_residency``);
+* freed allocations are never charged (kernel access asserts).
+
+``system_policy`` / ``managed_policy`` / ``explicit_policy`` remain as thin
+compatibility constructors; new code should go through
+``repro.core.registry`` (``register_policy`` / ``make_policy``).
 
 The serving stack allocates its paged KV pool under the *system* policy
 (one umem page per KV pool page): the scheduler in serve/engine.py moves
@@ -19,30 +70,385 @@ counter-based delayed migration when the pool exceeds device capacity.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.pagetable import Actor, BlockTable, Tier
+from repro.core.runs import RunMap, union_runs
 
 KB = 1024
 MB = 1024 * 1024
 
 
+class OutOfDeviceMemory(RuntimeError):
+    pass
+
+
+@dataclass
+class Allocation:
+    name: str
+    nbytes: int
+    policy: "MemPolicy"
+    table: Optional[BlockTable]  # None for explicit (device-resident, no PTEs)
+    device_bytes_explicit: int = 0
+    pending: Optional[RunMap] = None  # system: notification-pending page runs
+    pending_count: int = 0  # fast-path: #pending pages ever set minus cleared
+    freed: bool = False
+
+
 @dataclass(frozen=True)
-class PolicyConfig:
-    kind: str  # system | managed | explicit
-    page_size: int  # system page size (PTE granularity)
-    migration_granule: int  # bytes moved per migration decision
+class MemPolicy:
+    """Abstract memory-policy backend: config knobs + lifecycle hooks.
+
+    Subclasses set ``kind`` (the registry/reporting name) and override the
+    hooks whose behavior differs from the paged defaults below. Config
+    fields a backend does not use are simply ignored by its hooks.
+    """
+
+    page_size: int = 64 * KB  # PTE granularity
+    migration_granule: int = 64 * KB  # bytes moved per migration decision
     counter_threshold: int = 256  # remote accesses before a notification
     auto_migrate: bool = True  # system: enable counter-based migration
     speculative_prefetch: int = 4  # managed: granules prefetched per fault
     max_migration_bytes_per_sync: int = 512 * MB  # driver batch per sync point
 
-    def __post_init__(self):
-        assert self.kind in ("system", "managed", "explicit"), self.kind
+    # capability flags (class attributes, not config fields)
+    kind = "abstract"  # registry / reporting name
+    paged = True  # allocations carry a BlockTable (False: device-resident blob)
+    migratable = True  # pages can move between tiers after first touch
+    evictable = False  # pages are LRU-eviction victims under device pressure
+    staged_transfers = False  # um.staged() charges h2d/d2h copies for this policy
+
+    # ------------------------------------------------------------ lifecycle
+    def on_alloc(self, um, name: str, nbytes: int) -> Allocation:
+        """Build the Allocation record and charge allocation bookkeeping.
+
+        Paged default: a lazy page table — allocation itself only creates
+        VMA bookkeeping (no PTEs, no residency)."""
+        table = BlockTable(name, nbytes, self.page_size)
+        a = Allocation(name, nbytes, self, table=table,
+                       pending=RunMap(table.num_pages, 0, np.int8))
+        um._charge(um.hw.alloc_per_page * min(table.num_pages, 64))
+        return a
+
+    def on_free(self, um, a: Allocation) -> None:
+        """Release residency and charge per-page deallocation."""
+        t = a.table
+        mapped = t.num_pages - t.resident_pages(Tier.UNMAPPED)
+        um._host_bytes -= t.resident_bytes(Tier.HOST)
+        um._device_bytes -= t.resident_bytes(Tier.DEVICE)
+        um._charge(um.hw.dealloc_per_page * mapped)
+
+    def make_staging(self, um, buf) -> Optional[Allocation]:
+        """from_host(): the host staging Allocation for the cudaMalloc+malloc
+        pair, or None when the policy's memory is CPU-accessible already."""
+        return None
+
+    # ------------------------------------------------------------ placement
+    def on_first_touch(self, um, a: Allocation, p0: int, p1: int,
+                       actor: Actor, n_unmapped: int, need_bytes: int) -> Tier:
+        """Charge PTE creation for the ``n_unmapped`` unmapped pages of
+        extent [p0, p1) and return the tier they map to. ``need_bytes`` is
+        what device residency would grow by if they map device-side."""
+        raise NotImplementedError(self.kind)
+
+    # --------------------------------------------------------------- access
+    def on_access(self, um, a: Allocation, p0: int, p1: int, actor: Actor):
+        """Pre-access migration hook, called after first-touch mapping and
+        before residency is read for charging. Returns an opaque context
+        value handed to :meth:`charge_access` (the managed backend returns
+        its thrash-mode flag). Default: no migration, falsy context."""
+        return None
+
+    def charge_access(self, um, a: Allocation, actor: Actor, is_write: bool,
+                      ctx, rs: np.ndarray, re_: np.ndarray, dm: np.ndarray,
+                      dev_b: float, host_b: float
+                      ) -> Tuple[float, float, float, float]:
+        """Classify one extent's resident bytes into charge-model buckets.
+
+        ``rs/re_`` are the extent's tier-run spans, ``dm`` the device-tier
+        mask, ``dev_b/host_b`` the (boundary-clipped) bytes per side. Must
+        update the traffic counters and return the
+        ``(local, remote_h2d, remote_d2h, remote_slow)`` contributions the
+        kernel accumulates. The default models a generic two-tier system:
+        the actor's home side is local, the far side crosses the link."""
+        tr = um.prof.traffic()
+        if actor is Actor.GPU:
+            tr.device_local += int(dev_b)
+            if ctx:  # thrash mode: remote reads at degraded link efficiency
+                tr.link_h2d += int(host_b)
+                tr.remote_h2d += int(host_b)
+                return dev_b, 0.0, 0.0, host_b
+            if is_write:
+                tr.link_d2h += int(host_b)
+                tr.remote_d2h += int(host_b)
+                return dev_b, 0.0, host_b, 0.0
+            tr.link_h2d += int(host_b)
+            tr.remote_h2d += int(host_b)
+            return dev_b, host_b, 0.0, 0.0
+        tr.host_local += int(host_b)
+        tr.link_d2h += int(dev_b)
+        return host_b, 0.0, dev_b, 0.0
+
+    # ------------------------------------------------------- pressure/sync
+    def on_pressure(self, um, a: Allocation, need_bytes: int) -> None:
+        """Device memory is short ``need_bytes`` for a migration into it.
+        Backends that participate in eviction reclaim here; the default
+        reclaims nothing (the migration prefix-fits what free space allows)."""
+
+    def on_sync(self, um, a: Allocation) -> None:
+        """Sync point (cudaDeviceSynchronize): drain any batched/delayed
+        migration state. Default: nothing pending."""
+
+    # -------------------------------------------------------------- routing
+    def resolve_actor_side(self, view, actor: Actor):
+        """Lower a BufferView to the raw Range the given actor touches.
+        Default: CPU actors land in the staging side whenever
+        ``make_staging`` created one, so a backend that stages does not
+        also have to reimplement the routing."""
+        if actor is Actor.CPU and view.buf.host is not None:
+            return (view.buf.host, view.lo, view.hi)
+        return (view.buf.alloc, view.lo, view.hi)
+
+
+@dataclass(frozen=True)
+class SystemPolicy(MemPolicy):
+    """System-allocated memory (malloc): one OS page table for both actors.
+
+    GPU first-touch pays the SMMU->OS round trip (§5.1.2); device-capacity
+    pressure maps host-side instead of evicting (graceful oversubscription);
+    remote GPU reads bump per-page access counters whose threshold
+    crossings queue notifications that sync() drains as batched migrations
+    (§2.2.1)."""
+
+    kind = "system"
+
+    def on_first_touch(self, um, a, p0, p1, actor, n_unmapped, need_bytes):
+        tr = um.prof.traffic()
+        if actor is Actor.GPU:
+            # GPU first-touch of system memory: SMMU fault -> OS on the CPU
+            # creates the PTE (the §5.1.2 init bottleneck)
+            um._charge(um.hw.pte_init_gpu * n_unmapped)
+            tr.pte_inits_gpu += n_unmapped
+        else:
+            um._charge(um.hw.pte_init_cpu * n_unmapped)
+            tr.pte_inits_cpu += n_unmapped
+        tier = actor.home_tier
+        if tier is Tier.DEVICE and need_bytes > um.device_free():
+            tier = Tier.HOST  # system memory: map host-side instead
+        return tier
+
+    def charge_access(self, um, a, actor, is_write, ctx, rs, re_, dm,
+                      dev_b, host_b):
+        out = super().charge_access(um, a, actor, is_write, ctx, rs, re_, dm,
+                                    dev_b, host_b)
+        if actor is Actor.GPU and self.auto_migrate and host_b:
+            # remote-access counters: one bump per host run; the (possibly
+            # partial) tail page has its own txn count
+            t = a.table
+            grain = um.hw.remote_access_grain
+            txn_full = max(1, t.page_size // grain)
+            txn_tail = max(1, t.tail_bytes // grain)
+            for s0, e0 in zip(rs[~dm], re_[~dm]):
+                s0, e0 = int(s0), int(e0)
+                if e0 == t.num_pages and txn_tail != txn_full:
+                    if e0 - 1 > s0:
+                        um._counter_bump(a, s0, e0 - 1, txn_full)
+                    um._counter_bump(a, e0 - 1, e0, txn_tail)
+                else:
+                    um._counter_bump(a, s0, e0, txn_full)
+        return out
+
+    def on_sync(self, um, a):
+        """Drain notification-pending pages as (pending ∩ host) runs under
+        the per-sync migration budget — O(runs), never O(pages)."""
+        if not self.auto_migrate or a.pending is None:
+            return
+        if a.pending_count == 0:  # invariant: count 0 <=> no pending runs
+            return
+        t = a.table
+        ps_, pe_ = a.pending.nonzero_runs()
+        hs, he = [], []
+        for s0, e0 in zip(ps_, pe_):
+            rs, re_ = t.runs_of(Tier.HOST, int(s0), int(e0))
+            hs.append(rs)
+            he.append(re_)
+        hs = np.concatenate(hs) if hs else np.empty(0, np.int64)
+        he = np.concatenate(he) if he else np.empty(0, np.int64)
+        if len(hs) == 0:
+            a.pending.clear()
+            a.pending_count = 0
+            return
+        budget = self.max_migration_bytes_per_sync
+        ks, ke = um._prefix_fit_runs(t, hs, he, budget)
+        um._migrate_in_runs(a, ks, ke)
+        for s0, e0 in zip(ks, ke):
+            a.pending.set_range(int(s0), int(e0), 0)
+        a.pending_count -= int((ke - ks).sum())
+
+
+@dataclass(frozen=True)
+class ManagedPolicy(MemPolicy):
+    """CUDA managed memory (cudaMallocManaged): fault-driven on-demand
+    migration at ``migration_granule`` + speculative prefetch, LRU eviction
+    under device pressure, thrash-mode remote reads when the touched working
+    set cannot fit even after evicting every other managed page (§7)."""
+
+    kind = "managed"
+    evictable = True
+
+    def on_first_touch(self, um, a, p0, p1, actor, n_unmapped, need_bytes):
+        tr = um.prof.traffic()
+        if actor is Actor.GPU:
+            # managed: first-touch maps straight into the GPU page table
+            granules = max(1, n_unmapped * a.table.page_size
+                           // self.migration_granule)
+            um._charge(um.hw.pte_init_cpu * granules)
+            tr.pte_inits_gpu += n_unmapped
+        else:
+            um._charge(um.hw.pte_init_cpu * n_unmapped)
+            tr.pte_inits_cpu += n_unmapped
+        tier = actor.home_tier
+        if tier is Tier.DEVICE and need_bytes > um.device_free():
+            um._evict_lru(need_bytes - um.device_free(), exclude=a)
+            if need_bytes > um.device_free():
+                tier = Tier.HOST  # spill the remainder
+        return tier
+
+    def on_access(self, um, a, p0, p1, actor):
+        t = a.table
+        if actor is Actor.GPU:
+            # fault-driven on-demand migration (+ speculative prefetch);
+            # when the touched working set cannot fit even after evicting
+            # every other managed page, the driver stops migrating and
+            # serves remote reads (paper §7 Fig. 12)
+            thrashing = False
+            hs, he = t.runs_of(Tier.HOST, p0, p1)
+            if len(hs):
+                ws = int(t.span_bytes(hs, he).sum())
+                evictable = sum(
+                    o.table.resident_bytes(Tier.DEVICE)
+                    for o in um.allocs.values()
+                    if o is not a and not o.freed and o.table is not None
+                    and o.policy.evictable)
+                thrashing = ws > um.device_free() + evictable
+            if len(hs) and not thrashing:
+                tr = um.prof.traffic()
+                gran_pages = max(1, self.migration_granule // t.page_size)
+                # faulting granules: the host runs projected onto granule
+                # space (overlaps/adjacency merged)
+                gs, ge = union_runs(hs // gran_pages,
+                                    (he - 1) // gran_pages + 1)
+                nfaults = int((ge - gs).sum())
+                tr.faults += nfaults
+                um._charge(um.hw.page_fault_cost * nfaults)
+                # speculative prefetch: each faulting granule drags in the
+                # next `pf` granules — expand the granule runs and clip
+                pf = self.speculative_prefetch
+                if pf > 0:
+                    gs, ge = union_runs(gs, ge + pf - 1)
+                    gmax = t.num_pages // gran_pages + 1
+                    ge = np.minimum(ge, gmax)
+                    keep = gs < ge
+                    ms = gs[keep] * gran_pages
+                    me = np.minimum(ge[keep] * gran_pages, t.num_pages)
+                    um._migrate_in_runs(a, ms, me)
+            return thrashing
+        # CPU touch of device-resident managed pages faults them back host
+        ds_, de_ = t.runs_of(Tier.DEVICE, p0, p1)
+        if len(ds_):
+            tr = um.prof.traffic()
+            n_dev = int((de_ - ds_).sum())
+            gran_pages = max(1, self.migration_granule // t.page_size)
+            gs, ge = union_runs(ds_ // gran_pages,
+                                (de_ - 1) // gran_pages + 1)
+            nfaults = int((ge - gs).sum())
+            tr.faults += nfaults
+            um._charge(um.hw.page_fault_cost * nfaults)
+            nbytes = int(t.span_bytes(ds_, de_).sum())
+            um._apply_delta(t.move_runs(ds_, de_, Tier.HOST))
+            tr.migrated_out += nbytes
+            tr.link_d2h += nbytes
+            um._charge(nbytes / um.hw.link_d2h
+                       + um.hw.migrate_per_page * n_dev)
+        return False
+
+    def on_pressure(self, um, a, need_bytes):
+        um._evict_lru(need_bytes - um.device_free(), exclude=a)
+
+
+@dataclass(frozen=True)
+class ExplicitPolicy(MemPolicy):
+    """cudaMalloc + cudaMemcpy: device-resident, no page table, explicit
+    staged copies through a malloc'd host pair, OOM on oversubscription."""
+
+    kind = "explicit"
+    paged = False
+    staged_transfers = True
+
+    def on_alloc(self, um, name, nbytes):
+        if nbytes > um.device_free():
+            raise OutOfDeviceMemory(
+                f"cudaMalloc({name}): {nbytes} > free {um.device_free()}")
+        a = Allocation(name, nbytes, self, table=None,
+                       device_bytes_explicit=nbytes)
+        um._device_bytes += nbytes
+        um._charge(um.hw.alloc_per_page * -(-nbytes // self.page_size))
+        return a
+
+    def on_free(self, um, a):
+        um._device_bytes -= a.device_bytes_explicit
+        um._charge(um.hw.dealloc_per_page *
+                   -(-a.nbytes // self.migration_granule))
+
+    def make_staging(self, um, buf):
+        # the malloc half of the pair: paged like the application's system-
+        # memory version (um.staging_page_size), never counter-migrated;
+        # the base resolve_actor_side routes CPU actors to it
+        return um.alloc(buf.name + "__host", buf.nbytes,
+                        system_policy(um.staging_page_size,
+                                      auto_migrate=False))
+
+
+@dataclass(frozen=True)
+class Mi300aUnifiedPolicy(MemPolicy):
+    """AMD MI300A unified physical memory: CPU and GPU share one HBM3 pool
+    and one page table. First touch maps (cheaply — no SMMU->OS round trip),
+    nothing migrates, nothing is evicted, and access latency is uniform;
+    exceeding the pool is a genuine OOM rather than graceful remote access.
+    Pair with the ``MI300A`` :class:`~repro.core.hardware.HardwareModel`,
+    whose equal device/host/link bandwidths make the generic charge
+    classification cost the same on either "side" of the single pool.
+    ``migratable = False`` also turns the runtime's explicit migration
+    APIs (prefetch/prefetch_async/demote) into placement no-ops: there is
+    nowhere to move a page to."""
+
+    kind = "mi300a_unified"
+    migratable = False
+
+    def on_first_touch(self, um, a, p0, p1, actor, n_unmapped, need_bytes):
+        # OOM before any charge: a caller probing capacity must not record
+        # PTE-init time/counters for pages that were never mapped
+        if need_bytes > um.device_free():
+            raise OutOfDeviceMemory(
+                f"MI300A unified pool exhausted mapping {a.name}: "
+                f"{need_bytes} > free {um.device_free()} "
+                "(a single physical pool cannot oversubscribe)")
+        # one shared OS page table: GPU and CPU first touch cost the same
+        tr = um.prof.traffic()
+        um._charge(um.hw.pte_init_cpu * n_unmapped)
+        if actor is Actor.GPU:
+            tr.pte_inits_gpu += n_unmapped
+        else:
+            tr.pte_inits_cpu += n_unmapped
+        return Tier.DEVICE  # the one pool; tiers exist only as bookkeeping
 
 
 def system_policy(page_size: int = 64 * KB, *, threshold: int = 256,
                   auto_migrate: bool = True,
-                  max_migration_bytes_per_sync: int = 512 * MB) -> PolicyConfig:
-    return PolicyConfig(
-        kind="system",
+                  max_migration_bytes_per_sync: int = 512 * MB) -> SystemPolicy:
+    return SystemPolicy(
         page_size=page_size,
         migration_granule=max(page_size, 64 * KB),
         counter_threshold=threshold,
@@ -51,16 +457,26 @@ def system_policy(page_size: int = 64 * KB, *, threshold: int = 256,
     )
 
 
-def managed_policy(page_size: int = 64 * KB, *, speculative_prefetch: int = 4) -> PolicyConfig:
+def managed_policy(page_size: int = 64 * KB, *,
+                   speculative_prefetch: int = 4) -> ManagedPolicy:
     # device-side pages are 2 MB (GPU-exclusive page table); host-side PTEs
     # use the system page size (alloc/dealloc/eviction costs)
-    return PolicyConfig(
-        kind="managed",
+    return ManagedPolicy(
         page_size=page_size,
         migration_granule=2 * MB,
         speculative_prefetch=speculative_prefetch,
     )
 
 
-def explicit_policy() -> PolicyConfig:
-    return PolicyConfig(kind="explicit", page_size=2 * MB, migration_granule=2 * MB)
+def explicit_policy() -> ExplicitPolicy:
+    return ExplicitPolicy(page_size=2 * MB, migration_granule=2 * MB)
+
+
+def mi300a_unified_policy(page_size: int = 64 * KB) -> Mi300aUnifiedPolicy:
+    return Mi300aUnifiedPolicy(page_size=page_size,
+                               migration_granule=page_size)
+
+
+# legacy alias: PolicyConfig was the frozen config record the runtime
+# branched on; the strategy base class subsumes it
+PolicyConfig = MemPolicy

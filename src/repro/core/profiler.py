@@ -38,6 +38,11 @@ class MemoryProfiler:
     phase_times: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     phase_traffic: Dict[str, TrafficCounters] = field(
         default_factory=lambda: defaultdict(TrafficCounters))
+    # per-kernel-label aggregation (modeled seconds + launch counts): labels
+    # default to operand-derived names (see UnifiedMemory.launch), so two
+    # different unnamed kernels never collapse into one ambiguous bucket
+    kernel_times: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    kernel_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     _phase: str = "default"
     # running peaks: sample() is O(1) per op (the runtime hands it cached
     # residency totals, never re-scanning per-allocation tier arrays) and
@@ -63,6 +68,11 @@ class MemoryProfiler:
     def charge(self, seconds: float) -> None:
         self.phase_times[self._phase] += seconds
 
+    def record_kernel(self, name: str, seconds: float) -> None:
+        """Attribute one kernel's modeled step time to its label."""
+        self.kernel_times[name] += seconds
+        self.kernel_counts[name] += 1
+
     def traffic(self) -> TrafficCounters:
         return self.phase_traffic[self._phase]
 
@@ -75,6 +85,8 @@ class MemoryProfiler:
             total.merge(t)
         return {
             "phase_times_s": dict(self.phase_times),
+            "kernel_times_s": dict(self.kernel_times),
+            "kernel_counts": dict(self.kernel_counts),
             "total_time_s": self.total_time(),
             "traffic": {k: vars(v) for k, v in self.phase_traffic.items()},
             "traffic_total": vars(total),

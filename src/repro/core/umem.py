@@ -29,11 +29,18 @@ O(runs overlapping the extent), never O(pages in extent): a uniform 16M-page
 working set is one run. Residency totals are cached (updated incrementally
 on every map/move), so profiler sampling is O(1) per op. The charge math is
 unchanged from the dense per-page implementation — modeled times and
-traffic are bit-identical (enforced by scripts/check_parity.py)."""
+traffic are bit-identical (enforced by scripts/check_parity.py).
+
+Policy behavior is *pluggable*: the runtime never branches on a policy
+name. Every policy-dependent decision — allocation shape, first-touch
+placement, pre-access migration, access-charge classification, eviction
+participation, sync-point draining, staging routing — dispatches to the
+allocation's :class:`~repro.core.policy.MemPolicy` hooks, so a new memory
+system (see ``Mi300aUnifiedPolicy``) plugs in through
+``repro.core.registry`` without touching this file."""
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -41,11 +48,15 @@ import numpy as np
 from repro.core.buffer import BufferView, UMBuffer, as_view
 from repro.core.hardware import GRACE_HOPPER, HardwareModel
 from repro.core.pagetable import Actor, BlockTable, Tier
-from repro.core.policy import PolicyConfig, system_policy
+from repro.core.policy import (  # noqa: F401  (Allocation/OOM re-exported)
+    Allocation,
+    MemPolicy,
+    OutOfDeviceMemory,
+    PolicyConfig,
+)
 from repro.core.profiler import MemoryProfiler
-from repro.core.runs import RunMap, union_runs
 
-Range = Tuple["Allocation", int, int]  # (alloc, lo, hi) byte range
+Range = Tuple[Allocation, int, int]  # (alloc, lo, hi) byte range
 
 
 def _as_range(r, actor: Actor) -> Range:
@@ -57,20 +68,25 @@ def _as_range(r, actor: Actor) -> Range:
     return r
 
 
-@dataclass
-class Allocation:
-    name: str
-    nbytes: int
-    policy: PolicyConfig
-    table: Optional[BlockTable]  # None for explicit (device-resident, no PTEs)
-    device_bytes_explicit: int = 0
-    pending: Optional[RunMap] = None  # system: notification-pending page runs
-    pending_count: int = 0  # fast-path: #pending pages ever set minus cleared
-    freed: bool = False
+def _operand_names(items: Sequence) -> List[str]:
+    """Unique buffer/allocation names of launch operands, in operand order."""
+    names = []
+    for r in items:
+        name = (as_view(r).buf.name if isinstance(r, (BufferView, UMBuffer))
+                else r[0].name)
+        if name not in names:
+            names.append(name)
+    return names
 
 
-class OutOfDeviceMemory(RuntimeError):
-    pass
+def _derived_label(reads: Sequence, writes: Sequence) -> str:
+    """Default launch label derived from the operand buffer names, so the
+    profiler's per-kernel report distinguishes unnamed kernels by what they
+    touch instead of collapsing them all into one "kernel" bucket."""
+    rd, wr = _operand_names(reads), _operand_names(writes)
+    if rd and wr:
+        return "+".join(rd) + "->" + "+".join(wr)
+    return "+".join(rd or wr) or "kernel"
 
 
 class UnifiedMemory:
@@ -137,36 +153,16 @@ class UnifiedMemory:
             self.prof.set_phase(prev)
 
     # ----------------------------------------------------------------- alloc
-    def alloc(self, name: str, nbytes: int, policy: PolicyConfig) -> Allocation:
+    def alloc(self, name: str, nbytes: int, policy: MemPolicy) -> Allocation:
         assert name not in self.allocs, f"duplicate alloc {name!r}"
-        if policy.kind == "explicit":
-            if nbytes > self.device_free():
-                raise OutOfDeviceMemory(
-                    f"cudaMalloc({name}): {nbytes} > free {self.device_free()}")
-            a = Allocation(name, nbytes, policy, table=None, device_bytes_explicit=nbytes)
-            self._device_bytes += nbytes
-            self._charge(self.hw.alloc_per_page * -(-nbytes // policy.page_size))
-        else:
-            table = BlockTable(name, nbytes, policy.page_size)
-            a = Allocation(name, nbytes, policy, table=table,
-                           pending=RunMap(table.num_pages, 0, np.int8))
-            # lazy PTEs: allocation itself only creates VMA bookkeeping
-            self._charge(self.hw.alloc_per_page * min(table.num_pages, 64))
+        a = policy.on_alloc(self, name, nbytes)
         self.allocs[name] = a
         self._sample()
         return a
 
     def free(self, a: Allocation) -> None:
         assert not a.freed
-        if a.table is not None:
-            mapped = a.table.num_pages - a.table.resident_pages(Tier.UNMAPPED)
-            self._host_bytes -= a.table.resident_bytes(Tier.HOST)
-            self._device_bytes -= a.table.resident_bytes(Tier.DEVICE)
-            self._charge(self.hw.dealloc_per_page * mapped)
-        else:
-            self._device_bytes -= a.device_bytes_explicit
-            self._charge(self.hw.dealloc_per_page *
-                         -(-a.nbytes // a.policy.migration_granule))
+        a.policy.on_free(self, a)
         a.freed = True
         self._sample()
 
@@ -182,7 +178,7 @@ class UnifiedMemory:
             self.free(a)
 
     # -------------------------------------------------------------- buffers
-    def array(self, name: str, shape, dtype, policy: PolicyConfig) -> UMBuffer:
+    def array(self, name: str, shape, dtype, policy: MemPolicy) -> UMBuffer:
         """Allocate a typed buffer: shape x dtype under `policy`.
 
         The buffer-centric analogue of alloc(): slices of the returned
@@ -195,24 +191,23 @@ class UnifiedMemory:
         return UMBuffer(self, a, shape, dtype)
 
     def from_host(self, name: str, shape, dtype,
-                  policy: PolicyConfig) -> UMBuffer:
+                  policy: MemPolicy) -> UMBuffer:
         """A buffer whose contents originate on the host (CPU init).
 
-        Under managed/system policies this is exactly array(): first-touch
-        placement follows the CPU writer. Under the explicit policy it
-        materializes the cudaMalloc + malloc pair — a device buffer plus a
-        ``<name>__host`` staging buffer (at ``staging_page_size``, the
-        application's system page size) — and launch() routes CPU-actor
-        accesses to the staging side. um.staged() charges the h2d/d2h copies
-        at phase boundaries."""
+        Under policies whose memory is CPU-accessible (managed/system/
+        mi300a_unified) this is exactly array(): first-touch placement
+        follows the CPU writer. A policy with staged transfers (explicit)
+        materializes the cudaMalloc + malloc pair via its ``make_staging``
+        hook — a device buffer plus a ``<name>__host`` staging buffer (at
+        ``staging_page_size``, the application's system page size) — and
+        launch() routes CPU-actor accesses to the staging side through
+        ``resolve_actor_side``. um.staged() charges the h2d/d2h copies at
+        phase boundaries."""
         buf = self.array(name, shape, dtype, policy)
-        if policy.kind == "explicit":
-            buf.host = self.alloc(
-                name + "__host", buf.nbytes,
-                system_policy(self.staging_page_size, auto_migrate=False))
+        buf.host = policy.make_staging(self, buf)
         return buf
 
-    def launch(self, name: str = "kernel", *, reads: Sequence = (),
+    def launch(self, name: Optional[str] = None, *, reads: Sequence = (),
                writes: Sequence = (), flops: float = 0.0,
                actor: Actor = Actor.GPU) -> float:
         """Buffer-level kernel launch: the tracked, policy-agnostic front
@@ -220,7 +215,12 @@ class UnifiedMemory:
         ``buf.rows(lo, hi)``) or whole UMBuffers; each resolves to exactly
         the byte extent the raw Range API would have used, so charges are
         bit-identical. CPU-actor accesses to from_host() buffers land in
-        their explicit-policy staging allocation."""
+        their staging allocation. When ``name`` is omitted, the label is
+        derived from the operand buffer names (reads->writes order, e.g.
+        ``"temp+power->temp_out"``), so per-kernel profiler reports stay
+        unambiguous when an app launches many unnamed kernels."""
+        if name is None:
+            name = _derived_label(reads, writes)
         return self.kernel(
             reads=[_as_range(r, actor) for r in reads],
             writes=[_as_range(w, actor) for w in writes],
@@ -229,16 +229,17 @@ class UnifiedMemory:
     @contextlib.contextmanager
     def staged(self, h2d: Sequence = (), d2h: Sequence = (), *,
                h2d_phase: str = "h2d", d2h_phase: str = "d2h"):
-        """Explicit-policy staging boundary around a compute region.
+        """Staging boundary around a compute region.
 
-        For every listed buffer/view under the *explicit* policy, charges the
-        cudaMemcpy h2d copies on entry (phase `h2d_phase`) and the d2h copies
-        on exit (phase `d2h_phase`), in list order. Buffers under managed or
-        system policies pass through untouched — the same `with` block is the
-        single code path for all three memory-management versions."""
+        For every listed buffer/view whose policy declares
+        ``staged_transfers`` (the explicit backend), charges the cudaMemcpy
+        h2d copies on entry (phase `h2d_phase`) and the d2h copies on exit
+        (phase `d2h_phase`), in list order. Buffers under directly-
+        accessible policies pass through untouched — the same `with` block
+        is the single code path for every memory-management version."""
         up = [as_view(v) for v in h2d]
         down = [as_view(v) for v in d2h]
-        todo = [v for v in up if v.buf.policy.kind == "explicit"]
+        todo = [v for v in up if v.buf.policy.staged_transfers]
         if todo:
             with self.phase(h2d_phase):
                 for v in todo:
@@ -246,7 +247,7 @@ class UnifiedMemory:
         try:
             yield self
         finally:
-            todo = [v for v in down if v.buf.policy.kind == "explicit"]
+            todo = [v for v in down if v.buf.policy.staged_transfers]
             if todo:
                 with self.phase(d2h_phase):
                     for v in todo:
@@ -254,36 +255,16 @@ class UnifiedMemory:
 
     # ------------------------------------------------------- page-level ops
     def _first_touch(self, a: Allocation, p0: int, p1: int, actor: Actor) -> None:
-        """Lazily map the unmapped pages of extent [p0, p1) to the toucher's tier."""
+        """Lazily map the unmapped pages of extent [p0, p1): the policy
+        charges PTE creation and picks the tier (spilling/evicting under
+        device pressure as its memory system dictates)."""
         t = a.table
         if t.resident_pages(Tier.UNMAPPED) == 0:
             return  # O(1) steady-state exit: the whole table is mapped
         n_unmapped, need = t.unmapped_stats(p0, p1)
         if n_unmapped == 0:
             return
-        tr = self.prof.traffic()
-        if actor is Actor.GPU and a.policy.kind == "system":
-            # GPU first-touch of system memory: SMMU fault -> OS on the CPU
-            # creates the PTE (the §5.1.2 init bottleneck)
-            self._charge(self.hw.pte_init_gpu * n_unmapped)
-            tr.pte_inits_gpu += n_unmapped
-        elif actor is Actor.GPU:
-            # managed: first-touch maps straight into the GPU page table
-            granules = max(1, n_unmapped * t.page_size // a.policy.migration_granule)
-            self._charge(self.hw.pte_init_cpu * granules)
-            tr.pte_inits_gpu += n_unmapped
-        else:
-            self._charge(self.hw.pte_init_cpu * n_unmapped)
-            tr.pte_inits_cpu += n_unmapped
-        tier = actor.home_tier
-        if tier is Tier.DEVICE:
-            if need > self.device_free():
-                if a.policy.kind == "managed":
-                    self._evict_lru(need - self.device_free(), exclude=a)
-                    if need > self.device_free():
-                        tier = Tier.HOST  # spill the remainder
-                else:
-                    tier = Tier.HOST  # system memory: map host-side instead
+        tier = a.policy.on_first_touch(self, a, p0, p1, actor, n_unmapped, need)
         self._apply_delta(t.map_unmapped(p0, p1, tier))
 
     def _evict_lru(self, need_bytes: int, exclude: Optional[Allocation] = None) -> None:
@@ -312,8 +293,8 @@ class UnifiedMemory:
         """
         cands: List[Allocation] = [
             a for a in self.allocs.values()
-            if not a.freed and a.table is not None and a.policy.kind == "managed"]
-        # cached-counter early-out: no managed allocation has device-resident
+            if not a.freed and a.table is not None and a.policy.evictable]
+        # cached-counter early-out: no evictable allocation has device-resident
         # pages -> nothing to evict, no run/array work at all
         if not any(a.table.resident_pages(Tier.DEVICE) for a in cands):
             return
@@ -396,7 +377,11 @@ class UnifiedMemory:
 
     def _migrate_in_runs(self, a: Allocation, starts, ends) -> int:
         """Move the host-resident pages of the given ascending [s, e) spans
-        to the device, evicting if managed. Returns bytes migrated."""
+        to the device, evicting if the policy reclaims under pressure.
+        Returns bytes migrated. Placement no-op for policies whose memory
+        system has no migration (a single physical pool)."""
+        if not a.policy.migratable:
+            return 0
         t = a.table
         hs, he = [], []
         for s0, e0 in zip(starts, ends):
@@ -411,8 +396,7 @@ class UnifiedMemory:
             return 0
         need = int(t.span_bytes(hs, he).sum())
         if need > self.device_free():
-            if a.policy.kind == "managed":
-                self._evict_lru(need - self.device_free(), exclude=a)
+            a.policy.on_pressure(self, a, need)
             if need > self.device_free():
                 hs, he = self._prefix_fit_runs(t, hs, he, self.device_free())
                 if len(hs) == 0:
@@ -472,58 +456,10 @@ class UnifiedMemory:
                 t.touch_range(p0, p1, self.epoch, is_write)
                 self._first_touch(a, p0, p1, actor)
 
-                thrashing = False
-                if a.policy.kind == "managed" and actor is Actor.GPU:
-                    # fault-driven on-demand migration (+ speculative prefetch);
-                    # when the touched working set cannot fit even after
-                    # evicting every other managed page, the driver stops
-                    # migrating and serves remote reads (paper §7 Fig. 12)
-                    hs, he = t.runs_of(Tier.HOST, p0, p1)
-                    if len(hs):
-                        ws = int(t.span_bytes(hs, he).sum())
-                        evictable = sum(
-                            o.table.resident_bytes(Tier.DEVICE)
-                            for o in self.allocs.values()
-                            if o is not a and not o.freed and o.table is not None
-                            and o.policy.kind == "managed")
-                        thrashing = ws > self.device_free() + evictable
-                    if len(hs) and not thrashing:
-                        gran_pages = max(1, a.policy.migration_granule // t.page_size)
-                        # faulting granules: the host runs projected onto
-                        # granule space (overlaps/adjacency merged)
-                        gs, ge = union_runs(hs // gran_pages,
-                                            (he - 1) // gran_pages + 1)
-                        nfaults = int((ge - gs).sum())
-                        tr.faults += nfaults
-                        self._charge(self.hw.page_fault_cost * nfaults)
-                        # speculative prefetch: each faulting granule drags in
-                        # the next `pf` granules — expand the granule runs and
-                        # clip to the table
-                        pf = a.policy.speculative_prefetch
-                        if pf > 0:
-                            gs, ge = union_runs(gs, ge + pf - 1)
-                            gmax = t.num_pages // gran_pages + 1
-                            ge = np.minimum(ge, gmax)
-                            keep = gs < ge
-                            ms = gs[keep] * gran_pages
-                            me = np.minimum(ge[keep] * gran_pages, t.num_pages)
-                            self._migrate_in_runs(a, ms, me)
-                elif a.policy.kind == "managed" and actor is Actor.CPU:
-                    ds_, de_ = t.runs_of(Tier.DEVICE, p0, p1)
-                    if len(ds_):
-                        n_dev = int((de_ - ds_).sum())
-                        gran_pages = max(1, a.policy.migration_granule // t.page_size)
-                        gs, ge = union_runs(ds_ // gran_pages,
-                                            (de_ - 1) // gran_pages + 1)
-                        nfaults = int((ge - gs).sum())
-                        tr.faults += nfaults
-                        self._charge(self.hw.page_fault_cost * nfaults)
-                        nbytes = int(t.span_bytes(ds_, de_).sum())
-                        self._apply_delta(t.move_runs(ds_, de_, Tier.HOST))
-                        tr.migrated_out += nbytes
-                        tr.link_d2h += nbytes
-                        self._charge(nbytes / self.hw.link_d2h
-                                     + self.hw.migrate_per_page * n_dev)
+                # pre-access migration (fault-driven paths); the returned
+                # context (e.g. managed's thrash-mode flag) feeds the charge
+                # classification below
+                ctx = a.policy.on_access(self, a, p0, p1, actor)
 
                 # account access traffic against current residency: per-run
                 # clipped bytes (boundary pages clip to [lo, hi); exact ints,
@@ -540,40 +476,12 @@ class UnifiedMemory:
                     rb[-1] = t.clipped_extent_bytes(int(rs[-1]), int(re_[-1]), lo, hi)
                     dev_b = float(rb[dm].sum())
                     host_b = float(rb[~dm].sum())
-                if actor is Actor.GPU:
-                    local_bytes += dev_b
-                    tr.device_local += int(dev_b)
-                    if thrashing:
-                        remote_slow += host_b
-                        tr.link_h2d += int(host_b)
-                        tr.remote_h2d += int(host_b)
-                    elif is_write:
-                        remote_d2h += host_b
-                        tr.link_d2h += int(host_b)
-                        tr.remote_d2h += int(host_b)
-                    else:
-                        remote_h2d += host_b
-                        tr.link_h2d += int(host_b)
-                        tr.remote_h2d += int(host_b)
-                    if a.policy.kind == "system" and a.policy.auto_migrate and host_b:
-                        # remote-access counters: one bump per host run; the
-                        # (possibly partial) tail page has its own txn count
-                        grain = self.hw.remote_access_grain
-                        txn_full = max(1, t.page_size // grain)
-                        txn_tail = max(1, t.tail_bytes // grain)
-                        for s0, e0 in zip(rs[~dm], re_[~dm]):
-                            s0, e0 = int(s0), int(e0)
-                            if e0 == t.num_pages and txn_tail != txn_full:
-                                if e0 - 1 > s0:
-                                    self._counter_bump(a, s0, e0 - 1, txn_full)
-                                self._counter_bump(a, e0 - 1, e0, txn_tail)
-                            else:
-                                self._counter_bump(a, s0, e0, txn_full)
-                else:
-                    local_bytes += host_b
-                    tr.host_local += int(host_b)
-                    remote_d2h += dev_b
-                    tr.link_d2h += int(dev_b)
+                l_b, h2d_b, d2h_b, slow_b = a.policy.charge_access(
+                    self, a, actor, is_write, ctx, rs, re_, dm, dev_b, host_b)
+                local_bytes += l_b
+                remote_h2d += h2d_b
+                remote_d2h += d2h_b
+                remote_slow += slow_b
 
         bw = self.hw.device_bw if actor is Actor.GPU else self.hw.host_bw
         t_local = local_bytes / bw
@@ -588,46 +496,24 @@ class UnifiedMemory:
         self._pending_overlap = 0.0
         self._charge(t_kernel + self.hw.kernel_launch)
         self._sample()
-        return self.clock - t0
+        dt = self.clock - t0
+        self.prof.record_kernel(name, dt)
+        return dt
 
     # ------------------------------------------------------------- sync/misc
     def sync(self) -> float:
-        """cudaDeviceSynchronize analogue: apply pending delayed migrations.
-
-        The notification-pending state is drained as runs: pending runs are
-        intersected with the host-tier runs, the per-sync migration budget
-        takes a page-prefix of the result, and the migrated runs are cleared
-        from the pending map — O(runs), never O(pages)."""
+        """cudaDeviceSynchronize analogue: each live paged allocation's
+        policy drains whatever it batches to sync points (the system
+        backend's notification-pending delayed migrations, under its
+        per-sync budget — O(runs), never O(pages))."""
         t0 = self.clock
         if self._pending_overlap:  # flush un-overlapped async prefetches
             self._charge(self._pending_overlap)
             self._pending_overlap = 0.0
         for a in self.allocs.values():
-            if a.freed or a.table is None or a.policy.kind != "system":
+            if a.freed or a.table is None:
                 continue
-            if not a.policy.auto_migrate or a.pending is None:
-                continue
-            if a.pending_count == 0:  # invariant: count 0 <=> no pending runs
-                continue
-            t = a.table
-            ps_, pe_ = a.pending.nonzero_runs()
-            hs, he = [], []
-            for s0, e0 in zip(ps_, pe_):
-                rs, re_ = t.runs_of(Tier.HOST, int(s0), int(e0))
-                hs.append(rs)
-                he.append(re_)
-            hs = np.concatenate(hs) if hs else np.empty(0, np.int64)
-            he = np.concatenate(he) if he else np.empty(0, np.int64)
-            if len(hs) == 0:
-                a.pending.clear()
-                a.pending_count = 0
-                continue
-            budget = a.policy.max_migration_bytes_per_sync
-            ks, ke = self._prefix_fit_runs(t, hs, he, budget)
-            self._migrate_in_runs(a, ks, ke)
-            for s0, e0 in zip(ks, ke):
-                a.pending.set_range(int(s0), int(e0), 0)
-            a.pending_count -= int((ke - ks).sum())
+            a.policy.on_sync(self, a)
         self._sample()
         return self.clock - t0
 
@@ -705,7 +591,7 @@ class UnifiedMemory:
             a.pending_count -= a.pending.count_nonzero(p0, p1)
             a.pending.set_range(p0, p1, 0)
         ds_, de_ = t.runs_of(Tier.DEVICE, p0, p1)
-        if len(ds_):
+        if len(ds_) and a.policy.migratable:
             nbytes = int(t.span_bytes(ds_, de_).sum())
             npages = int((de_ - ds_).sum())
             self._apply_delta(t.move_runs(ds_, de_, Tier.HOST))

@@ -97,7 +97,7 @@ class ServeEngine:
                  um: Optional[UnifiedMemory] = None, greedy: bool = True,
                  prefill_chunk: int = 128, watermark_pages: int = 0,
                  admit_device_fraction: float = 0.5,
-                 counter_threshold: int = 16):
+                 counter_threshold: int = 16, mem_policy=None):
         assert cfg.mixer == "attention", "paged serving targets attention archs"
         assert set(cfg.layer_kinds()) == {"attention"}, \
             "the chunked-prefill path needs homogeneous global attention"
@@ -108,7 +108,8 @@ class ServeEngine:
         self.cache = PagedKVCache(cfg, self.layout, max_seqs=max_seqs,
                                   max_len=max_len, page_size=page_size,
                                   num_pages=num_pages, um=um,
-                                  counter_threshold=counter_threshold)
+                                  counter_threshold=counter_threshold,
+                                  mem_policy=mem_policy)
         self.um = um
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0

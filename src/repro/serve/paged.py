@@ -2,8 +2,10 @@
 
 The pool is one allocation in the UnifiedMemory runtime: page residency
 (HBM vs host), access counters and migrations follow the paper's system-
-memory policy — hot sequences' pages migrate device-side, cold ones are
-read remotely. kernels/paged_attention consumes the pool directly.
+memory policy by default — hot sequences' pages migrate device-side, cold
+ones are read remotely (``mem_policy`` swaps the pool onto any registered
+backend, see docs/memspace.md). kernels/paged_attention consumes the pool
+directly.
 
 The pool may be allocated *larger than device capacity* (``num_pages``):
 under the system policy first-touch simply maps the overflow host-side and
@@ -25,8 +27,8 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Actor, BufferView, UnifiedMemory, coalesce_runs,
-                        system_policy)
+from repro.core import (Actor, BufferView, MemPolicy, UnifiedMemory,
+                        coalesce_runs, make_policy, system_policy)
 from repro.models.layout import HeadLayout
 
 
@@ -42,7 +44,8 @@ class PagedKVCache:
     def __init__(self, cfg, layout: HeadLayout, *, max_seqs: int, max_len: int,
                  page_size: int = 64, num_pages: Optional[int] = None,
                  dtype=jnp.float32, um: Optional[UnifiedMemory] = None,
-                 counter_threshold: int = 16):
+                 counter_threshold: int = 16,
+                 mem_policy: "MemPolicy | str | None" = None):
         self.cfg = cfg
         self.layout = layout
         self.page_size = page_size
@@ -69,10 +72,28 @@ class PagedKVCache:
             # The pool is a typed buffer (num_pages x page_bytes), the same
             # front-end the paper apps use: one umem page per pool page, and
             # buf.rows(lo, hi) is the extent of a pool-page run.
+            # mem_policy opens the pool to other registered backends: a
+            # MemPolicy instance is used AS-IS — it carries its own
+            # threshold, and counter_threshold only applies when mem_policy
+            # is None or a registry name whose factory takes the knob — and
+            # its page_size must equal page_bytes; a registry name is built
+            # at pool-page granularity.
+            if mem_policy is None:
+                mem_policy = system_policy(page_size=self.page_bytes,
+                                           threshold=counter_threshold)
+            elif isinstance(mem_policy, str):
+                mem_policy = make_policy(mem_policy, page_size=self.page_bytes,
+                                         threshold=counter_threshold)
+            assert mem_policy.paged, \
+                f"KV pool needs a paged backend; {mem_policy.kind!r} has no " \
+                "page table (its swap/demote/extent paths cannot work)"
+            assert mem_policy.page_size == self.page_bytes, \
+                f"pool policy must be paged at one umem page per KV pool " \
+                f"page ({mem_policy.kind!r} came back with page_size=" \
+                f"{mem_policy.page_size}, pool pages are {self.page_bytes} B " \
+                "— its factory must honor the page_size knob)"
             self.buf = um.array("kv_pool", (self.num_pages, self.page_bytes),
-                                np.uint8,
-                                system_policy(page_size=self.page_bytes,
-                                              threshold=counter_threshold))
+                                np.uint8, mem_policy)
             self.alloc = self.buf.alloc
 
     # ------------------------------------------------------------- slots

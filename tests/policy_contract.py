@@ -1,0 +1,92 @@
+"""Policy-conformance contract: invariants every MemPolicy backend must keep.
+
+The checks here are *reusable* — tests/test_policy_contract.py runs them
+against every policy in the registry (including out-of-tree backends a
+contributor registers before importing the suite), so "write a backend,
+register it, run pytest" gives conformance coverage for free.
+
+Contracts:
+
+* **alloc/free symmetry** — after alloc -> touch (CPU and GPU) -> free, the
+  runtime's host/device residency totals return to their pre-alloc values.
+* **residency cache == recount** — after a randomized op sequence (kernels
+  from both actors, prefetch/demote where paged, sync), the incrementally
+  maintained totals equal a from-scratch recount of every table.
+* **no charge on freed allocations** — kernel access to a freed allocation
+  raises and leaves the modeled clock untouched.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Actor, UnifiedMemory
+
+KB = 1024
+NBYTES = 512 * KB
+
+
+def _touch_both_sides(um, a, nbytes):
+    um.kernel(writes=[(a, 0, nbytes)], actor=Actor.CPU, name="cpu_init")
+    um.kernel(reads=[(a, 0, nbytes)], actor=Actor.GPU, name="gpu_read")
+    um.sync()
+
+
+def check_alloc_free_symmetry(policy) -> None:
+    um = UnifiedMemory()
+    base = (um.host_bytes(), um.device_bytes())
+    a = um.alloc("sym", NBYTES, policy)
+    _touch_both_sides(um, a, NBYTES)
+    um.free(a)
+    assert (um.host_bytes(), um.device_bytes()) == base, \
+        f"{policy.kind}: residency leaked across free"
+
+
+def check_residency_cache_matches_recount(policy, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    um = UnifiedMemory()
+    allocs = [um.alloc(f"r{i}", NBYTES, policy) for i in range(3)]
+    for _ in range(40):
+        a = allocs[int(rng.integers(len(allocs)))]
+        lo = int(rng.integers(0, NBYTES - 1)) & ~0xFFF
+        hi = min(NBYTES, lo + int(rng.integers(1, NBYTES // 4)))
+        op = int(rng.integers(5))
+        if op == 0:
+            um.kernel(writes=[(a, lo, hi)], actor=Actor.CPU, name="w")
+        elif op == 1:
+            um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU, name="r")
+        elif op == 2 and a.table is not None:
+            um.prefetch(a, lo, hi)
+        elif op == 3 and a.table is not None:
+            um.demote(a, lo, hi)
+        else:
+            um.sync()
+        assert um._recompute_residency() == (um.host_bytes(),
+                                             um.device_bytes()), \
+            f"{policy.kind}: cached residency drifted from recount"
+    for a in allocs:
+        um.free(a)
+    assert um._recompute_residency() == (um.host_bytes(), um.device_bytes())
+
+
+def check_no_charge_on_freed(policy) -> None:
+    um = UnifiedMemory()
+    a = um.alloc("gone", NBYTES, policy)
+    _touch_both_sides(um, a, NBYTES)
+    um.free(a)
+    clock = um.clock
+    try:
+        um.kernel(reads=[(a, 0, NBYTES)], actor=Actor.GPU, name="use_after_free")
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError(f"{policy.kind}: kernel over a freed allocation "
+                             "did not raise")
+    assert um.clock == clock, \
+        f"{policy.kind}: freed allocation was charged"
+
+
+CONTRACTS = (
+    check_alloc_free_symmetry,
+    check_residency_cache_matches_recount,
+    check_no_charge_on_freed,
+)

@@ -189,6 +189,33 @@ def test_launch_routes_cpu_actor_to_staging_side():
     assert um.prof.traffic().device_local == 256 * KB
 
 
+def test_launch_default_label_derived_from_buffer_names():
+    """Regression: unnamed launches used to all share the "kernel" label,
+    making per-kernel profiler reports ambiguous. The default now derives
+    from the operand buffer names (reads->writes)."""
+    um = UnifiedMemory()
+    a = um.array("temp", (64 * KB,), np.uint8, system_policy(4 * KB))
+    b = um.array("power", (64 * KB,), np.uint8, system_policy(4 * KB))
+    c = um.array("temp_out", (64 * KB,), np.uint8, system_policy(4 * KB))
+    um.launch(writes=[a[:], b[:]], actor=Actor.CPU)
+    um.launch(reads=[a[:], b[:]], writes=[c[:]], actor=Actor.GPU)
+    um.launch(reads=[c[:]], actor=Actor.GPU)
+    kt = um.prof.kernel_times
+    assert set(kt) == {"temp+power", "temp+power->temp_out", "temp_out"}
+    assert "kernel" not in kt  # two different unnamed kernels never collide
+    assert um.prof.kernel_counts["temp+power->temp_out"] == 1
+    # an explicit name still wins, and repeated names aggregate
+    um.launch("sweep", reads=[a[:]], actor=Actor.GPU)
+    um.launch("sweep", reads=[a[:]], actor=Actor.GPU)
+    assert um.prof.kernel_counts["sweep"] == 2
+    # operand-free launches keep the legacy fallback label
+    um.launch(actor=Actor.GPU)
+    assert "kernel" in um.prof.kernel_times
+    # report() surfaces the per-kernel breakdown
+    rep = um.report()
+    assert rep["kernel_counts"]["sweep"] == 2
+
+
 def test_free_live_keeps_reserved_names():
     um = UnifiedMemory()
     um.alloc("__ballast__", 1 * MB, explicit_policy())

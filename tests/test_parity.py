@@ -58,3 +58,27 @@ def test_charges_bit_identical_to_fixture(key, fixture):
     for section in want:
         assert got[section] == want[section], f"{key}: {section} drifted"
     assert got == want
+
+
+def _load_check_parity():
+    import importlib.util
+
+    path = Path(__file__).parent.parent / "scripts" / "check_parity.py"
+    spec = importlib.util.spec_from_file_location("check_parity", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_select_configs_policies_subset_filter():
+    """check_parity --policies: a contributor re-verifying one backend gets
+    exactly that backend's configs (and filters compose with --only)."""
+    cp = _load_check_parity()
+    assert len(cp.select_configs()) == 66
+    sys_only = cp.select_configs(policies=("system",))
+    assert len(sys_only) == 6 + 6 * 4  # fig3 + fig11 ratios, six apps each
+    assert all(p == "system" for _, _, p, _ in sys_only)
+    both = cp.select_configs(policies=("system", "explicit"))
+    assert {p for _, _, p, _ in both} == {"system", "explicit"}
+    assert len(cp.select_configs(only="fig3/", policies=("managed",))) == 6
+    assert cp.select_configs(policies=("nope",)) == []

@@ -6,24 +6,30 @@ tractable because the page-table runtime is run-compressed: cost scales
 with fragmentation, not allocation size). Workloads:
 
   stream  -- system policy, GPU reads a sliding window (NBYTES/16) with
-             periodic syncs (counter-based delayed migration path); 1 GiB
-             at 4 KB / 64 KB / 2 MB pages
+             periodic syncs (counter-based delayed migration path), one
+             launch at a time; 1 GiB at 4 KB / 64 KB / 2 MB pages
+  batch   -- the stream workload submitted through the batched engine
+             (um.launch_batch, 1024 launches per engine step + sync):
+             per-launch Python dispatch amortized into one vectorized
+             charge pass; 1 GiB at the same page sizes
   evict   -- managed policy with an explicit ballast squeezing free device
              memory to 256 MiB, so every window fault migrates + evicts
              (the LRU eviction path); 1 GiB at the same page sizes
-  huge    -- the stream workload at 16 GiB / 4 KB pages (4M+ PTEs): the
-             scale where the old dense per-page runtime collapsed to
-             ~295 kernel-ops/s and ~80 MB of metadata arrays. The
-             run-compressed core keeps per-op cost O(runs) and metadata
-             O(fragmentation); the emitted metadata_bytes proves no
-             O(num_pages) array was ever allocated.
+  huge    -- the *batched* stream workload at 16 GiB / 4 KB pages (4M+
+             PTEs): the dense per-page runtime collapsed here (~295
+             kernel-ops/s, ~80 MB metadata); the run-compressed core
+             brought it to ~13k ops/s per-launch, and the batched engine
+             is the current headline path (>=100k kernel-ops/s)
+  huge-seq -- the same 16 GiB workload through per-launch kernel() calls,
+             tracking the sequential path's trajectory alongside
 
 Emits wall-clock us/kernel-op plus kernel-ops/sec and modeled-pages/sec to
 stdout (CSV) and writes BENCH_simthroughput.json (workload -> metrics) for
-the cross-PR perf trajectory. SIM_TP_OPS scales the op count (default 48
-stream / 12 evict). SIM_TP_FLOOR="stream/4KB=2000,huge/4KB=1000" makes the
-run fail if any named workload drops below its kernel-ops/s floor — the CI
-perf-smoke gate.
+the cross-PR perf trajectory. SIM_TP_OPS scales the per-launch op count
+(default 48 stream / 12 evict); batched workloads run SIM_TP_OPS*256 ops
+(256 per engine step). SIM_TP_FLOOR="stream/4KB=2000,huge/4KB=30000" makes
+the run fail if any named workload drops below its kernel-ops/s floor —
+the CI perf-smoke gate.
 """
 from __future__ import annotations
 
@@ -31,8 +37,8 @@ import os
 import sys
 import time
 
-from repro.core import (GRACE_HOPPER, Actor, UnifiedMemory, explicit_policy,
-                        managed_policy, system_policy)
+from repro.core import (GRACE_HOPPER, Actor, KernelLaunch, UnifiedMemory,
+                        explicit_policy, managed_policy, system_policy)
 
 from benchmarks.common import emit, write_json
 
@@ -59,6 +65,34 @@ def _stream(page_size: int, ops: int, nbytes: int = NBYTES) -> tuple:
         pages += -(-(hi - lo) // page_size)
         if i % 8 == 7:
             um.sync()
+    dt = time.perf_counter() - t0
+    meta = a.table.metadata_nbytes() + a.pending.bytes_used()
+    return dt, pages, meta
+
+
+def _stream_batched(page_size: int, ops: int, nbytes: int = NBYTES,
+                    batch: int = 1024) -> tuple:
+    """The stream workload through the batched engine: 1024 launches per
+    um.launch_batch call, one sync per batch (vs every 8 ops sequentially —
+    syncs are per-engine-step either way)."""
+    um = UnifiedMemory()
+    a = um.alloc("buf", nbytes, system_policy(page_size))
+    um.kernel(writes=[(a, 0, nbytes)], actor=Actor.CPU, name="init")
+    window = nbytes // 16
+    t0 = time.perf_counter()
+    pages = 0
+    i = 0
+    while i < ops:
+        n = min(batch, ops - i)
+        items = []
+        for j in range(i, i + n):
+            lo = (j * window) % nbytes
+            hi = min(lo + window, nbytes)
+            items.append(KernelLaunch("op", reads=[(a, lo, hi)]))
+            pages += -(-(hi - lo) // page_size)
+        um.launch_batch(items)
+        um.sync()
+        i += n
     dt = time.perf_counter() - t0
     meta = a.table.metadata_nbytes() + a.pending.bytes_used()
     return dt, pages, meta
@@ -118,16 +152,22 @@ def _check_floors(results: dict) -> None:
 
 def run() -> None:
     ops = int(os.environ.get("SIM_TP_OPS", "48"))
+    bops = int(os.environ.get("SIM_TP_BATCH_OPS", str(ops * 256)))
     results = {}
     for label, ps in PAGE_SIZES.items():
         dt, pages, meta = _stream(ps, ops)
         _record(results, f"stream/{label}", dt, ops, pages, meta)
+    for label, ps in PAGE_SIZES.items():
+        dt, pages, meta = _stream_batched(ps, bops)
+        _record(results, f"batch/{label}", dt, bops, pages, meta)
     eops = max(1, ops // 4)
     for label, ps in PAGE_SIZES.items():
         dt, pages, meta = _evict(ps, eops)
         _record(results, f"evict/{label}", dt, eops, pages, meta)
     dt, pages, meta = _stream(4 * KB, ops, nbytes=HUGE_NBYTES)
-    _record(results, "huge/4KB", dt, ops, pages, meta)
+    _record(results, "huge-seq/4KB", dt, ops, pages, meta)
+    dt, pages, meta = _stream_batched(4 * KB, bops, nbytes=HUGE_NBYTES)
+    _record(results, "huge/4KB", dt, bops, pages, meta)
     write_json("simthroughput", results, hardware=GRACE_HOPPER.name,
                policies=("system", "managed", "explicit"))
     _check_floors(results)

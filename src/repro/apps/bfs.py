@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
-from repro.core import Actor, UMBuffer, coalesce_runs
+from repro.core import Actor, KernelLaunch, UMBuffer, coalesce_runs
 
 
 def _random_graph(n_nodes: int, deg: int, seed: int = 0):
@@ -124,9 +124,10 @@ def run_bfs(policy_kind: str = "system", *, n_nodes: int = 1 << 16, deg: int = 8
                     frac = min(1.0, fsize * 4.0 / total)
                     hi = max(4096, int(frac * edge_bytes) // 4096 * 4096)
                     reads = [edges.byterange(0, min(hi, edge_bytes))]
-                um.launch(f"level{lv}", reads=reads + [rowp[:]],
-                          writes=[cost[:]],
-                          flops=2.0 * fsize * deg, actor=Actor.GPU)
+                um.launch_batch([KernelLaunch(
+                    f"level{lv}", reads=reads + [rowp[:]],
+                    writes=[cost[:]],
+                    flops=2.0 * fsize * deg, actor=Actor.GPU)])
                 um.sync()
 
     with um.phase("dealloc"):

@@ -39,6 +39,20 @@ from repro.core import (
 KB = 1024
 MB = 1024 * 1024
 
+# observers called with every UnifiedMemory make_um builds (the apps import
+# make_um by name, so monkeypatching the module attribute would miss them);
+# core/trace.record_app attaches its recorder through this
+_UM_HOOKS = []
+
+
+def add_um_hook(fn) -> None:
+    """Register ``fn(um)`` to be called on every make_um-built runtime."""
+    _UM_HOOKS.append(fn)
+
+
+def remove_um_hook(fn) -> None:
+    _UM_HOOKS.remove(fn)
+
 
 @dataclass
 class AppResult:
@@ -103,6 +117,8 @@ def make_um(policy_kind: str, *, page_size: int = 64 * KB,
     pol = make_policy(policy_kind, page_size=page_size,
                       auto_migrate=auto_migrate, threshold=threshold,
                       speculative_prefetch=speculative_prefetch)
+    for hook in _UM_HOOKS:
+        hook(um)
     return um, pol
 
 

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
-from repro.core import Actor
+from repro.core import Actor, KernelLaunch
 from repro.kernels.stencil5 import stencil5
 
 COEFF = 0.1
@@ -40,9 +40,12 @@ def run_hotspot(policy_kind: str = "system", *, rows: int = 1024, cols: int = 10
             src, dst = temp_m, out_m
             for it in range(iters):
                 temp = stencil5(temp, COEFF, interpret=interpret) + 0.001 * power
-                um.launch(f"sweep{it}", reads=[src[:], power_m[:]],
-                          writes=[dst[:]],
-                          flops=7.0 * rows * cols, actor=Actor.GPU)
+                # submitted through the batched engine (sync-per-iteration
+                # keeps the batch at one launch; charges are identical)
+                um.launch_batch([KernelLaunch(
+                    f"sweep{it}", reads=[src[:], power_m[:]],
+                    writes=[dst[:]],
+                    flops=7.0 * rows * cols, actor=Actor.GPU)])
                 um.sync()
                 src, dst = dst, src
 

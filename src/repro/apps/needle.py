@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
-from repro.core import Actor
+from repro.core import Actor, KernelLaunch
 
 
 def _nw_rows(sim, penalty: int):
@@ -61,10 +61,11 @@ def run_needle(policy_kind: str = "system", *, n: int = 2048, penalty: int = 1,
                 lo = int(frac0 * nbytes) // 4096 * 4096
                 hi = max(lo + 4096, int(frac1 * nbytes) // 4096 * 4096)
                 hi = min(hi, nbytes)
-                um.launch(f"wave{w0}",
-                          reads=[ref.byterange(lo, hi), mat.byterange(lo, hi)],
-                          writes=[mat.byterange(lo, hi)],
-                          flops=10.0 * (hi - lo) / 4, actor=Actor.GPU)
+                um.launch_batch([KernelLaunch(
+                    f"wave{w0}",
+                    reads=[ref.byterange(lo, hi), mat.byterange(lo, hi)],
+                    writes=[mat.byterange(lo, hi)],
+                    flops=10.0 * (hi - lo) / 4, actor=Actor.GPU)])
                 um.sync()
 
     with um.phase("dealloc"):

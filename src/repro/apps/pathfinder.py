@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
-from repro.core import Actor
+from repro.core import Actor, KernelLaunch
 
 
 def _dp_all_rows(data):
@@ -46,10 +46,11 @@ def run_pathfinder(policy_kind: str = "system", *, rows: int = 4096, cols: int =
             # model the row-sweep: one kernel per block of rows, streaming the wall
             for r0 in range(0, rows, rows_per_kernel):
                 r1 = min(r0 + rows_per_kernel, rows)
-                um.launch(f"rows{r0}",
-                          reads=[wall.rows(r0, r1), res.rows(0, 1)],
-                          writes=[res.rows(1, 2)],
-                          flops=5.0 * (r1 - r0) * cols, actor=Actor.GPU)
+                um.launch_batch([KernelLaunch(
+                    f"rows{r0}",
+                    reads=[wall.rows(r0, r1), res.rows(0, 1)],
+                    writes=[res.rows(1, 2)],
+                    flops=5.0 * (r1 - r0) * cols, actor=Actor.GPU)])
                 um.sync()
 
     with um.phase("dealloc"):

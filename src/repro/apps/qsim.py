@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.common import KB, MB, AppResult, AppSpec, finish, make_um
-from repro.core import Actor
+from repro.core import Actor, KernelBatch
 from repro.kernels.qv_gate import apply_two_qubit_gate
 
 
@@ -50,6 +50,7 @@ def run_qsim(policy_kind: str = "system", *, n_qubits: int = 16,
     with um.phase("compute"):
         for layer in range(depth):
             perm = rng.permutation(n_qubits)
+            batch = KernelBatch()
             for g in range(n_qubits // 2):
                 q1, q2 = int(perm[2 * g]), int(perm[2 * g + 1])
                 gate = _random_su4(rng)
@@ -67,9 +68,13 @@ def run_qsim(policy_kind: str = "system", *, n_qubits: int = 16,
                                   reads=[band], writes=[band],
                                   flops=32.0 * band.nbytes / 16, actor=Actor.GPU)
                 else:
-                    um.launch(f"gate_l{layer}_{q1}_{q2}",
-                              reads=[sv[:]], writes=[sv[:]],
-                              flops=32.0 * n_amps, actor=Actor.GPU)
+                    # gates of one layer act on disjoint qubit pairs: defer
+                    # them into one batched engine step per layer
+                    batch.launch(f"gate_l{layer}_{q1}_{q2}",
+                                 reads=[sv[:]], writes=[sv[:]],
+                                 flops=32.0 * n_amps, actor=Actor.GPU)
+            if len(batch):
+                um.launch_batch(batch)
             um.sync()
 
     with um.phase("dealloc"):

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps.common import KB, AppResult, AppSpec, finish, make_um
-from repro.core import Actor
+from repro.core import Actor, KernelBatch
 from repro.kernels.stencil5 import stencil5
 
 
@@ -52,10 +52,14 @@ def run_srad(policy_kind: str = "system", *, rows: int = 1024, cols: int = 1024,
     with um.phase("compute"):
         for it in range(iters):
             J = _srad_iter(J, lam, interpret)
-            t = um.launch(f"grad{it}", reads=[J_m[:]], writes=[c_m[:]],
-                          flops=12.0 * rows * cols, actor=Actor.GPU)
-            t += um.launch(f"diff{it}", reads=[J_m[:], c_m[:]], writes=[J_m[:]],
-                           flops=8.0 * rows * cols, actor=Actor.GPU)
+            # both sweeps of one iteration go down in a single batched
+            # engine step (charges identical to two sequential launches)
+            t = sum(um.launch_batch(
+                KernelBatch()
+                .launch(f"grad{it}", reads=[J_m[:]], writes=[c_m[:]],
+                        flops=12.0 * rows * cols, actor=Actor.GPU)
+                .launch(f"diff{it}", reads=[J_m[:], c_m[:]], writes=[J_m[:]],
+                        flops=8.0 * rows * cols, actor=Actor.GPU)))
             t += um.sync()
             tr = um.prof.traffic()
             per_iter.append({

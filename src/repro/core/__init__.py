@@ -27,4 +27,10 @@ from repro.core.registry import (  # noqa: F401
     register_policy,
 )
 from repro.core.profiler import MemoryProfiler, TrafficCounters  # noqa: F401
-from repro.core.umem import Allocation, OutOfDeviceMemory, UnifiedMemory  # noqa: F401
+from repro.core.umem import (  # noqa: F401
+    Allocation,
+    KernelBatch,
+    KernelLaunch,
+    OutOfDeviceMemory,
+    UnifiedMemory,
+)

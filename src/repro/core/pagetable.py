@@ -27,7 +27,7 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.runs import RunMap
+from repro.core.runs import RunMap, union_runs
 
 # tier-indexed counter slots: index = int(tier) + 1
 _NTIERS = 3
@@ -272,6 +272,41 @@ class BlockTable:
         self._epoch.set_range(p0, p1, epoch)
         if write:
             self._dirty.set_range(p0, p1, 1)
+
+    def touch_batch(self, starts, ends, epochs, writes) -> None:
+        """touch_range for a whole batch of extents in one pass.
+
+        Per page the recorded epoch is the max over covering extents; since
+        the caller hands epochs that are positive and nondecreasing in
+        submission order, max == the last writer, matching N sequential
+        touch_range calls. Dirty is set over the union of write extents.
+        Cost is O(batch·log batch + runs touched), never O(pages)."""
+        starts = np.asarray(starts, np.int64)
+        ends = np.asarray(ends, np.int64)
+        epochs = np.asarray(epochs, np.int64)
+        writes = np.asarray(writes, bool)
+        m = ends > starts
+        if not m.all():
+            starts, ends, epochs, writes = (starts[m], ends[m],
+                                            epochs[m], writes[m])
+        if len(starts) == 0:
+            return
+        # segment sweep: breakpoints split [min, max) into atomic segments;
+        # scatter each extent's epoch into its segment span with maximum.at
+        bp = np.unique(np.concatenate((starts, ends)))
+        segmax = np.zeros(len(bp) - 1, np.int64)
+        i0 = np.searchsorted(bp, starts)
+        cnt = np.searchsorted(bp, ends) - i0
+        seg = (np.repeat(i0, cnt)
+               + np.arange(int(cnt.sum())) - np.repeat(np.cumsum(cnt) - cnt, cnt))
+        np.maximum.at(segmax, seg, np.repeat(epochs, cnt))
+        for a, b in coalesce_runs(np.flatnonzero(segmax > 0)):
+            self._epoch.splice(int(bp[a]), int(bp[b]), bp[a:b], segmax[a:b])
+        if writes.any():
+            ws, we = starts[writes], ends[writes]
+            order = np.argsort(ws, kind="stable")
+            for s0, e0 in zip(*union_runs(ws[order], we[order])):
+                self._dirty.set_range(int(s0), int(e0), 1)
 
     def map_unmapped(self, p0: int, p1: int, tier: Tier) -> ResidencyDelta:
         """First-touch: map every unmapped page of [p0, p1) into `tier`."""

@@ -119,6 +119,9 @@ class MemPolicy:
     migratable = True  # pages can move between tiers after first touch
     evictable = False  # pages are LRU-eviction victims under device pressure
     staged_transfers = False  # um.staged() charges h2d/d2h copies for this policy
+    batched_charge = False  # opt-in: charge_access folds into kernel_batch's
+    # array-wide pass (see batch_ready / charge_access_batch); backends that
+    # never opt in are looped through single launches, bit-identically
 
     # ------------------------------------------------------------ lifecycle
     def on_alloc(self, um, name: str, nbytes: int) -> Allocation:
@@ -191,6 +194,54 @@ class MemPolicy:
         tr.link_d2h += int(dev_b)
         return host_b, 0.0, dev_b, 0.0
 
+    # ------------------------------------------------------ batched access
+    def batch_ready(self, um, a: Allocation, p0: int, p1: int,
+                    actor: Actor) -> bool:
+        """Certify extent [p0, p1) — the hull of one allocation's extents in
+        a kernel batch — for the batched charge pass. Return True only when,
+        with tier state frozen, this policy's sequential per-launch hooks
+        reduce to :meth:`charge_access_batch`: no first-touch mapping and no
+        in-kernel migration/fault/thrash work from :meth:`on_access`.
+        ``kernel_batch`` falls back to looping single launches whenever any
+        touched policy answers False (or never opted in via
+        ``batched_charge``), so backends that don't implement batching stay
+        bit-identical automatically. The default certifies any fully-mapped
+        hull, which is exact for policies whose ``on_access`` is the
+        inherited no-op."""
+        if not self.batched_charge:
+            return False
+        t = a.table
+        return (t.resident_pages(Tier.UNMAPPED) == 0
+                or t.unmapped_stats(p0, p1)[0] == 0)
+
+    def charge_access_batch(self, um, a: Allocation, gpu: np.ndarray,
+                            wr: np.ndarray, p0s: np.ndarray, p1s: np.ndarray,
+                            dev_b: np.ndarray, host_b: np.ndarray):
+        """Array-wide :meth:`charge_access` over one allocation's certified
+        batch extents. ``gpu``/``wr`` are per-extent actor/write masks,
+        ``p0s``/``p1s`` the page extents, ``dev_b``/``host_b`` the
+        boundary-clipped int64 bytes per side. Must update the traffic
+        counters and return per-extent ``(local, remote_h2d, remote_d2h,
+        remote_slow)`` int64 arrays for the batch engine to accumulate
+        per item. Every value is an exact integer, so the downstream float
+        conversions are order-independent and bit-identical to the
+        sequential path. Only called on extents :meth:`batch_ready`
+        certified (``ctx`` is falsy by construction — no thrash mode)."""
+        tr = um.prof.traffic()
+        zero = np.zeros_like(dev_b)
+        loc = np.where(gpu, dev_b, host_b)
+        h2d = np.where(gpu & ~wr, host_b, zero)
+        d2h = np.where(gpu & wr, host_b, zero) + np.where(~gpu, dev_b, zero)
+        tr.device_local += int(dev_b[gpu].sum())
+        rem_h2d = int(h2d.sum())
+        tr.link_h2d += rem_h2d
+        tr.remote_h2d += rem_h2d
+        rem_d2h = int(host_b[gpu & wr].sum())
+        tr.remote_d2h += rem_d2h
+        tr.link_d2h += rem_d2h + int(dev_b[~gpu].sum())
+        tr.host_local += int(host_b[~gpu].sum())
+        return loc, h2d, d2h, zero
+
     # ------------------------------------------------------- pressure/sync
     def on_pressure(self, um, a: Allocation, need_bytes: int) -> None:
         """Device memory is short ``need_bytes`` for a migration into it.
@@ -223,6 +274,8 @@ class SystemPolicy(MemPolicy):
     (§2.2.1)."""
 
     kind = "system"
+    batched_charge = True  # on_access is the inherited no-op; the counter
+    # bumps fold into charge_access_batch below
 
     def on_first_touch(self, um, a, p0, p1, actor, n_unmapped, need_bytes):
         tr = um.prof.traffic()
@@ -258,6 +311,55 @@ class SystemPolicy(MemPolicy):
                     um._counter_bump(a, e0 - 1, e0, txn_tail)
                 else:
                     um._counter_bump(a, s0, e0, txn_full)
+        return out
+
+    def charge_access_batch(self, um, a, gpu, wr, p0s, p1s, dev_b, host_b):
+        out = super().charge_access_batch(um, a, gpu, wr, p0s, p1s,
+                                          dev_b, host_b)
+        m = gpu & (host_b != 0)
+        if self.auto_migrate and m.any():
+            # The sequential path bumps each page once per covering extent's
+            # host run. With tier state frozen across the certified batch,
+            # k bumps of txn collapse to one bump of k*txn: increments are
+            # monotone, so the threshold crossing (old < thr <= old + total),
+            # the final counter values and the pending/notification state
+            # are all identical.
+            t = a.table
+            lo, hi = int(p0s[m].min()), int(p1s[m].max())
+            hs, he = t.runs_of(Tier.HOST, lo, hi)
+            if len(hs):
+                # intersect every host-carrying extent with the host runs
+                # (vectorized runs_of(HOST, p0, p1) over all extents at once)
+                ia = np.searchsorted(he, p0s[m], "right")
+                ib = np.searchsorted(hs, p1s[m], "left")
+                cnt = ib - ia
+                rep = np.repeat(np.arange(len(cnt)), cnt)
+                ridx = (np.repeat(ia, cnt)
+                        + np.arange(int(cnt.sum()))
+                        - np.repeat(np.cumsum(cnt) - cnt, cnt))
+                cs = np.maximum(hs[ridx], p0s[m][rep])
+                ce = np.minimum(he[ridx], p1s[m][rep])
+                if len(cs):
+                    grain = um.hw.remote_access_grain
+                    txn_full = max(1, t.page_size // grain)
+                    txn_tail = max(1, t.tail_bytes // grain)
+                    # coverage sweep: how many extents' host runs cover each
+                    # elementary segment -> one collapsed bump per segment
+                    bp = np.unique(np.concatenate((cs, ce)))
+                    cov = np.zeros(len(bp), np.int64)
+                    np.add.at(cov, np.searchsorted(bp, cs), 1)
+                    np.add.at(cov, np.searchsorted(bp, ce), -1)
+                    cov = np.cumsum(cov[:-1])
+                    for s0, e0, k in zip(bp[:-1].tolist(), bp[1:].tolist(),
+                                         cov.tolist()):
+                        if k == 0:
+                            continue
+                        if e0 == t.num_pages and txn_tail != txn_full:
+                            if e0 - 1 > s0:
+                                um._counter_bump(a, s0, e0 - 1, txn_full * k)
+                            um._counter_bump(a, e0 - 1, e0, txn_tail * k)
+                        else:
+                            um._counter_bump(a, s0, e0, txn_full * k)
         return out
 
     def on_sync(self, um, a):
@@ -297,6 +399,20 @@ class ManagedPolicy(MemPolicy):
 
     kind = "managed"
     evictable = True
+    batched_charge = True  # only for extents batch_ready below certifies
+
+    def batch_ready(self, um, a, p0, p1, actor):
+        # ready only when on_access would be a no-op over the hull: no
+        # far-tier pages to fault/migrate (GPU: host pages; CPU: device
+        # pages), hence no thrash-mode check and no speculative prefetch
+        if not super().batch_ready(um, a, p0, p1, actor):
+            return False
+        t = a.table
+        far = Tier.HOST if actor is Actor.GPU else Tier.DEVICE
+        if t.resident_pages(far) == 0:
+            return True
+        s, _ = t.runs_of(far, p0, p1)
+        return len(s) == 0
 
     def on_first_touch(self, um, a, p0, p1, actor, n_unmapped, need_bytes):
         tr = um.prof.traffic()
@@ -426,6 +542,8 @@ class Mi300aUnifiedPolicy(MemPolicy):
 
     kind = "mi300a_unified"
     migratable = False
+    batched_charge = True  # on_access is the inherited no-op; batch_ready's
+    # fully-mapped-hull check means the OOM-raising first touch cannot fire
 
     def on_first_touch(self, um, a, p0, p1, actor, n_unmapped, need_bytes):
         # OOM before any charge: a caller probing capacity must not record

@@ -41,6 +41,7 @@ system (see ``Mi300aUnifiedPolicy``) plugs in through
 from __future__ import annotations
 
 import contextlib
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -89,6 +90,38 @@ def _derived_label(reads: Sequence, writes: Sequence) -> str:
     return "+".join(rd or wr) or "kernel"
 
 
+@dataclass(slots=True)
+class KernelLaunch:
+    """One deferred launch inside a :class:`KernelBatch` — the same
+    arguments :meth:`UnifiedMemory.launch` takes, held until the batch is
+    submitted. reads/writes accept BufferViews, UMBuffers or raw Ranges."""
+    name: Optional[str] = None
+    reads: Sequence = ()
+    writes: Sequence = ()
+    flops: float = 0.0
+    actor: Actor = Actor.GPU
+
+
+class KernelBatch:
+    """Builder for :meth:`UnifiedMemory.launch_batch`: accumulate launches,
+    submit once. ``batch.launch(...)`` mirrors ``um.launch(...)`` and
+    returns the builder for chaining."""
+
+    __slots__ = ("items",)
+
+    def __init__(self, items: Optional[List[KernelLaunch]] = None):
+        self.items: List[KernelLaunch] = list(items) if items else []
+
+    def launch(self, name: Optional[str] = None, *, reads: Sequence = (),
+               writes: Sequence = (), flops: float = 0.0,
+               actor: Actor = Actor.GPU) -> "KernelBatch":
+        self.items.append(KernelLaunch(name, reads, writes, flops, actor))
+        return self
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
 class UnifiedMemory:
     def __init__(self, hw: HardwareModel = GRACE_HOPPER,
                  profiler: Optional[MemoryProfiler] = None,
@@ -107,6 +140,9 @@ class UnifiedMemory:
         # BlockTable mutation; makes _sample O(1) per op)
         self._host_bytes = 0
         self._device_bytes = 0
+        # optional TraceRecorder (core/trace.py): every public runtime op
+        # appends one event when set; None costs a single identity check
+        self._trace = None
 
     # ------------------------------------------------------------------ util
     def _charge(self, seconds: float) -> None:
@@ -147,21 +183,29 @@ class UnifiedMemory:
     def phase(self, name: str):
         prev = self.prof.phase
         self.prof.set_phase(name)
+        if self._trace is not None:
+            self._trace.on_phase(name)
         try:
             yield
         finally:
             self.prof.set_phase(prev)
+            if self._trace is not None:
+                self._trace.on_phase(prev)
 
     # ----------------------------------------------------------------- alloc
     def alloc(self, name: str, nbytes: int, policy: MemPolicy) -> Allocation:
         assert name not in self.allocs, f"duplicate alloc {name!r}"
         a = policy.on_alloc(self, name, nbytes)
         self.allocs[name] = a
+        if self._trace is not None:
+            self._trace.on_alloc(a)
         self._sample()
         return a
 
     def free(self, a: Allocation) -> None:
         assert not a.freed
+        if self._trace is not None:
+            self._trace.on_free(a.name)
         a.policy.on_free(self, a)
         a.freed = True
         self._sample()
@@ -225,6 +269,33 @@ class UnifiedMemory:
             reads=[_as_range(r, actor) for r in reads],
             writes=[_as_range(w, actor) for w in writes],
             flops=flops, actor=actor, name=name)
+
+    def launch_batch(self, batch) -> List[float]:
+        """Submit a whole batch of launches in one engine step.
+
+        ``batch`` is a :class:`KernelBatch` or any iterable of
+        :class:`KernelLaunch`. Charges are bit-identical to issuing the
+        same launches through :meth:`launch` one by one — the batched
+        engine (see :meth:`kernel_batch`) is a pure dispatch optimization,
+        certified per policy and falling back to the sequential path
+        whenever a launch could mutate placement mid-batch. Returns the
+        per-launch modeled seconds, in submission order."""
+        items = batch.items if isinstance(batch, KernelBatch) else list(batch)
+        resolved = []
+        ap = resolved.append
+        for it in items:
+            actor = it.actor
+            name = it.name
+            # raw-tuple fast path: _as_range passes tuples through, so only
+            # buffer views pay the resolve call
+            ap((name if name is not None
+                else _derived_label(it.reads, it.writes),
+                [r if type(r) is tuple else _as_range(r, actor)
+                 for r in it.reads],
+                [w if type(w) is tuple else _as_range(w, actor)
+                 for w in it.writes],
+                it.flops, actor))
+        return self.kernel_batch(resolved)
 
     @contextlib.contextmanager
     def staged(self, h2d: Sequence = (), d2h: Sequence = (), *,
@@ -430,6 +501,8 @@ class UnifiedMemory:
                flops: float = 0.0, actor: Actor = Actor.GPU,
                name: str = "kernel") -> float:
         """Model one kernel/loop-step. Returns modeled seconds."""
+        if self._trace is not None:
+            self._trace.on_kernel(name, reads, writes, flops, actor)
         self.epoch += 1
         t0 = self.clock
         tr = self.prof.traffic()
@@ -500,12 +573,210 @@ class UnifiedMemory:
         self.prof.record_kernel(name, dt)
         return dt
 
+    # --------------------------------------------------------- batched kernel
+    def kernel_batch(self, items: Sequence) -> List[float]:
+        """Model a batch of kernel steps in one engine pass.
+
+        ``items`` are ``(name, reads, writes, flops, actor)`` tuples with
+        raw Ranges (launch_batch resolves buffer views down to this). The
+        batch is charged in one vectorized sweep over run intersections —
+        per-launch Python dispatch (range walks, per-extent tier_runs,
+        profiler calls) is hoisted into array math over all extents at
+        once. Semantics are bit-identical to looping :meth:`kernel`:
+
+        * every touched (allocation, actor) hull must be certified by the
+          policy's ``batch_ready`` hook — placement provably frozen for the
+          whole batch (no first touch, no faults/migrations/evictions, no
+          counter-threshold *drains* — bumps still accrue) — else the whole
+          batch falls back to the sequential loop, which is identical by
+          construction;
+        * byte math reproduces the boundary-page clip quirks of
+          ``clipped_extent_bytes`` exactly (all values exact integers, so
+          float accumulation order cannot diverge);
+        * LRU epochs land as max-over-covering-extents (== last writer),
+          counter bumps collapse k identical bumps into one k-fold bump
+          (same crossings, same pending set, same notifications);
+        * the profiler finalization loop replays _charge/_sample/
+          record_kernel float-op for float-op per item.
+        """
+        if self._trace is not None:
+            # one batch event; suppress inner recording (the fallback loops
+            # kernel(), which would otherwise double-record every launch)
+            self._trace.on_batch(items)
+            saved, self._trace = self._trace, None
+            try:
+                return self._kernel_batch(items)
+            finally:
+                self._trace = saved
+        return self._kernel_batch(items)
+
+    def _kernel_batch(self, items: Sequence) -> List[float]:
+        n = len(items)
+        if n == 0:
+            return []
+        # ---- pass 1: flatten to per-allocation extent rows ----------------
+        # side-effect-free: the fallback below must start from clean state
+        groups: Dict[int, Tuple[Allocation, list]] = {}
+        explicit_loc = [0] * n
+        explicit_tot = 0
+        GPU = Actor.GPU
+        item_gpu = np.empty(n, bool)
+        flops_arr = np.empty(n, np.float64)
+        for i, (name, reads, writes, flops, actor) in enumerate(items):
+            gpu = 1 if actor is GPU else 0
+            item_gpu[i] = gpu
+            flops_arr[i] = flops
+            for is_write, ranges in ((0, reads), (1, writes)):
+                for a, lo, hi in ranges:
+                    assert not a.freed, a.name
+                    t = a.table
+                    if t is None:  # explicit: device-local always
+                        explicit_loc[i] += hi - lo
+                        explicit_tot += hi - lo
+                        continue
+                    # page_range inlined (hot): Actor.GPU == 1, so the gpu
+                    # flag doubles as the actor id in the row
+                    assert 0 <= lo <= hi <= t.nbytes, (lo, hi, t.nbytes)
+                    if lo == hi:
+                        continue
+                    ps = t.page_size
+                    g = groups.get(id(a))
+                    if g is None:
+                        groups[id(a)] = g = (a, [])
+                    g[1].append((lo // ps, -(-hi // ps), lo, hi, i,
+                                 is_write, gpu))
+        # ---- pass 2: certify every (allocation, actor) hull ---------------
+        certified = True
+        prepped = []
+        for a, rows in groups.values():
+            M = np.asarray(rows, np.int64)
+            acs = M[:, 6]
+            for ac in (1, 0):
+                m = acs == ac
+                if not m.any():
+                    continue
+                h0 = int(M[m, 0].min())
+                h1 = int(M[m, 1].max())
+                if not a.policy.batch_ready(self, a, h0, h1, Actor(ac)):
+                    certified = False
+                    break
+            if not certified:
+                break
+            prepped.append((a, M))
+        if not certified:  # conformance fallback: the sequential engine
+            return [self.kernel(reads=r, writes=w, flops=f, actor=ac, name=nm)
+                    for nm, r, w, f, ac in items]
+        # ---- fast path: one vectorized charge pass per allocation ---------
+        E0 = self.epoch
+        loc_item = np.zeros(n, np.float64)
+        h2d_item = np.zeros(n, np.float64)
+        d2h_item = np.zeros(n, np.float64)
+        slow_item = np.zeros(n, np.float64)
+        for a, M in prepped:
+            t = a.table
+            p0s, p1s = M[:, 0], M[:, 1]
+            los, his = M[:, 2], M[:, 3]
+            idx = M[:, 4]
+            wr = M[:, 5].astype(bool)
+            gpu = M[:, 6].astype(bool)
+            h0, h1 = int(p0s.min()), int(p1s.max())
+            rs, re_, rv = t.tier_runs(h0, h1)
+            dev = rv == int(Tier.DEVICE)
+            ps = t.page_size
+            # device-byte prefix over the frozen tier runs: two searchsorteds
+            # per extent replace a per-extent tier_runs walk
+            cum = np.concatenate(([0], np.cumsum(
+                np.where(dev, (re_ - rs) * ps, 0))))
+            ja = np.searchsorted(rs, p0s, "right") - 1
+            jb = np.searchsorted(rs, p1s, "right") - 1
+            devb = (cum[jb] + np.where(dev[jb], (p1s - rs[jb]) * ps, 0)
+                    - cum[ja] - np.where(dev[ja], (p0s - rs[ja]) * ps, 0))
+            totb = (p1s - p0s) * ps
+            j1 = np.searchsorted(rs, p1s - 1, "right") - 1  # run of last page
+            if h1 == t.num_pages:
+                # span_bytes/range_bytes semantics: extents reaching the
+                # final (possibly partial) page count tail_bytes for it
+                tadj = t.tail_bytes - ps
+                tm = p1s == t.num_pages
+                totb = totb + np.where(tm, tadj, 0)
+                devb = devb + np.where(tm & dev[j1], tadj, 0)
+            # boundary-page clips charge against the tier that owns the
+            # boundary page — including clipped_extent_bytes' pinned quirk
+            # (the tail clip uses the full-page overhang even on a partial
+            # final page, possibly driving that side negative)
+            headclip = los - p0s * ps
+            tailclip = p1s * ps - his
+            d0, d1 = dev[ja], dev[j1]
+            dev_b = (devb - np.where(d0, headclip, 0)
+                     - np.where(d1, tailclip, 0))
+            host_b = (totb - devb - np.where(~d0, headclip, 0)
+                      - np.where(~d1, tailclip, 0))
+            l_b, h2d_b, d2h_b, slow_b = a.policy.charge_access_batch(
+                self, a, gpu, wr, p0s, p1s, dev_b, host_b)
+            loc_item += np.bincount(idx, weights=l_b, minlength=n)
+            h2d_item += np.bincount(idx, weights=h2d_b, minlength=n)
+            d2h_item += np.bincount(idx, weights=d2h_b, minlength=n)
+            slow_item += np.bincount(idx, weights=slow_b, minlength=n)
+            t.touch_batch(p0s, p1s, E0 + 1 + idx, wr)
+        if explicit_tot:
+            self.prof.traffic().device_local += explicit_tot
+            loc_item += np.asarray(explicit_loc, np.float64)
+        self.epoch = E0 + n
+        # ---- per-item times (same float expressions as kernel()) ----------
+        hw = self.hw
+        t_local = loc_item / np.where(item_gpu, hw.device_bw, hw.host_bw)
+        eff = hw.remote_efficiency
+        t_remote = (h2d_item / (hw.link_h2d * eff)
+                    + d2h_item / (hw.link_d2h * eff)
+                    + slow_item / (hw.link_h2d * hw.managed_thrash_efficiency))
+        t_kern = np.maximum(np.maximum(t_local, t_remote),
+                            flops_arr / hw.flops_rate)
+        # ---- finalization: replay _charge/_sample/record_kernel exactly ---
+        # residency is frozen across a certified batch, so every sample
+        # carries the same totals and the peaks update once
+        prof = self.prof
+        hb = self._host_bytes
+        devtot = self._device_bytes + prof.driver_baseline
+        if hb > prof._peak_host:
+            prof._peak_host = hb
+        if devtot > prof._peak_device:
+            prof._peak_device = devtot
+        timeline = prof.timeline
+        ktimes, kcounts = prof.kernel_times, prof.kernel_counts
+        pt, phase = prof.phase_times, prof.phase
+        acc = pt[phase]
+        kl = hw.kernel_launch
+        ov = self._pending_overlap
+        self._pending_overlap = 0.0
+        clock = self.clock
+        tk = t_kern.tolist()
+        dts = []
+        for i, it in enumerate(items):
+            tki = tk[i]
+            if i == 0 and ov > tki:  # async prefetch overlaps the first item
+                tki = ov
+            s = tki + kl
+            c1 = clock + s
+            dt = c1 - clock
+            clock = c1
+            acc += s
+            timeline.append((c1, hb, devtot))
+            name = it[0]
+            ktimes[name] += dt
+            kcounts[name] += 1
+            dts.append(dt)
+        self.clock = clock
+        pt[phase] = acc
+        return dts
+
     # ------------------------------------------------------------- sync/misc
     def sync(self) -> float:
         """cudaDeviceSynchronize analogue: each live paged allocation's
         policy drains whatever it batches to sync points (the system
         backend's notification-pending delayed migrations, under its
         per-sync budget — O(runs), never O(pages))."""
+        if self._trace is not None:
+            self._trace.on_sync()
         t0 = self.clock
         if self._pending_overlap:  # flush un-overlapped async prefetches
             self._charge(self._pending_overlap)
@@ -519,6 +790,8 @@ class UnifiedMemory:
 
     def copy(self, a: Allocation, lo: int, hi: int, direction: str) -> float:
         """Explicit cudaMemcpy. direction: 'h2d' | 'd2h'."""
+        if self._trace is not None:
+            self._trace.on_copy(a.name, lo, hi, direction)
         nbytes = hi - lo
         bw = self.hw.link_h2d if direction == "h2d" else self.hw.link_d2h
         self._charge(nbytes / bw)
@@ -540,6 +813,8 @@ class UnifiedMemory:
         max(kernel, prefetch))."""
         if lo is None:
             a, lo, hi = _as_range(a, Actor.GPU)
+        if self._trace is not None:
+            self._trace.on_prefetch(a.name, lo, hi, overlap)
         t0 = self.clock
         assert a.table is not None, "prefetch needs a paged allocation"
         p0, p1 = a.table.page_range(lo, hi)
@@ -580,6 +855,8 @@ class UnifiedMemory:
         BufferView in place of (Allocation, lo, hi)."""
         if lo is None:
             a, lo, hi = _as_range(a, Actor.GPU)
+        if self._trace is not None:
+            self._trace.on_demote(a.name, lo, hi)
         t0 = self.clock
         assert a.table is not None, "demote needs a paged allocation"
         t = a.table

@@ -27,8 +27,9 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Actor, BufferView, MemPolicy, UnifiedMemory,
-                        coalesce_runs, make_policy, system_policy)
+from repro.core import (Actor, BufferView, KernelBatch, MemPolicy,
+                        UnifiedMemory, coalesce_runs, make_policy,
+                        system_policy)
 from repro.models.layout import HeadLayout
 
 
@@ -188,9 +189,21 @@ class PagedKVCache:
         self.v_pools[layer] = self.v_pools[layer].at[pids, slots].set(v)
 
     def commit_token(self, sid_list, pos_list) -> None:
+        # lengths first, then one batched engine step over every decoded
+        # sequence's pool pages: sids are unique within a decode batch, so
+        # each kv_seq launch sees exactly the views the sequential
+        # touch-per-sequence loop would have (charges are bit-identical)
         for s, p in zip(sid_list, pos_list):
             self.lengths[s] = p + 1
-            self._touch(s)
+        if self.um is None:
+            return
+        batch = KernelBatch()
+        for s in sid_list:
+            views = self.seq_views(s)
+            if views:
+                batch.launch(f"kv_seq{s}", reads=views, actor=Actor.GPU)
+        if len(batch):
+            self.um.launch_batch(batch)
 
     # ------------------------------------------------------------- reads
     def gather_kv(self, sid: int, layer: int, length: int):

@@ -1,0 +1,205 @@
+"""Batched launch engine: bit-identity with the sequential path.
+
+um.launch_batch / kernel_batch is certified as a *pure dispatch
+optimization*: for every registered policy backend, charging a batch must
+leave the runtime in exactly the state the per-launch loop produces —
+modeled clock (compared as float hex), profiler counters and timelines,
+page-table RunMaps, counter/pending notification state — on both the
+vectorized fast path and the conformance fallback. A fast-path engagement
+test pins that the batched sweep actually runs for the policies that
+declare ``batched_charge`` (otherwise the identity tests would only ever
+exercise the fallback looping kernel())."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import Actor, KernelBatch, KernelLaunch, UnifiedMemory
+from repro.core.registry import available_policies, make_policy
+
+try:  # the property test is a bonus layer: the seeded suite below runs
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+KB = 1024
+PS = 4 * KB
+NB_A = 96 * PS            # page-aligned allocation
+NB_B = 37 * PS + 777      # partial tail page (span/range tail quirks)
+
+POLICIES = available_policies()
+
+
+def _mk(kind: str):
+    um = UnifiedMemory()
+    a = um.alloc("A", NB_A, make_policy(kind, page_size=PS, threshold=8))
+    b = um.alloc("B", NB_B, make_policy(kind, page_size=PS, threshold=8))
+    return um, a, b
+
+
+def _warm(um, a, b) -> None:
+    """CPU first-touch both allocations, then a GPU pass + sync: leaves each
+    policy in its own steady placement (host under system with counters
+    part-bumped, device under managed, ...) before the measured batch."""
+    um.kernel(writes=[(a, 0, NB_A), (b, 0, NB_B)], actor=Actor.CPU,
+              name="init")
+    um.kernel(reads=[(a, 0, NB_A), (b, 0, NB_B)], actor=Actor.GPU,
+              name="warm")
+    um.sync()
+
+
+def _rm(rm):
+    return rm.starts.tolist(), np.asarray(rm.vals).tolist()
+
+
+def _state(um) -> dict:
+    prof = um.prof
+    allocs = {}
+    for name, al in um.allocs.items():
+        t = al.table
+        allocs[name] = None if t is None else {
+            "tier": _rm(t._tier), "epoch": _rm(t._epoch),
+            "dirty": _rm(t._dirty), "counter": _rm(t._gpu_counter),
+            "pending": _rm(al.pending), "pending_count": al.pending_count,
+        }
+    return {
+        "clock": um.clock.hex(),
+        "epoch": um.epoch,
+        "phase_times": {k: v.hex() for k, v in prof.phase_times.items()},
+        "traffic": dataclasses.asdict(prof.traffic()),
+        "kernel_times": {k: v.hex() for k, v in prof.kernel_times.items()},
+        "kernel_counts": dict(prof.kernel_counts),
+        "timeline": [(ts.hex(), h, d) for ts, h, d in prof.timeline],
+        "peaks": (prof._peak_host, prof._peak_device),
+        "allocs": allocs,
+    }
+
+
+def _extent(rng, nbytes: int):
+    lo = int(rng.integers(0, nbytes))
+    hi = int(rng.integers(lo, nbytes + 1))
+    return lo, hi
+
+
+def _items(rng, a, b, n: int):
+    """n random launches: mixed actors, 1-2 reads, 0-1 writes, extents on
+    either allocation (unaligned, overlapping, occasionally empty)."""
+    items = []
+    for i in range(n):
+        actor = Actor.GPU if rng.random() < 0.8 else Actor.CPU
+        tgt = lambda: (a, *_extent(rng, NB_A)) if rng.random() < 0.5 \
+            else (b, *_extent(rng, NB_B))
+        reads = [tgt() for _ in range(int(rng.integers(1, 3)))]
+        writes = [tgt()] if rng.random() < 0.4 else []
+        items.append((f"k{i}", reads, writes, float(rng.integers(0, 5)) * 1e6,
+                      actor))
+    return items
+
+
+def _apply_and_compare(kind: str, seed: int, n_items: int,
+                       warm: bool) -> None:
+    rng = np.random.default_rng(seed)
+    items = None
+    states = []
+    dts = []
+    for batched in (False, True):
+        um, a, b = _mk(kind)
+        if warm:
+            _warm(um, a, b)
+        if items is None:
+            items = _items(rng, a, b, n_items)
+            # rebind extents onto this um's allocations by name on replay
+            raw = [(nm, [(r[0].name, r[1], r[2]) for r in rd],
+                    [(w[0].name, w[1], w[2]) for w in wr], fl, ac)
+                   for nm, rd, wr, fl, ac in items]
+        resolved = [(nm, [(um.allocs[an], lo, hi) for an, lo, hi in rd],
+                     [(um.allocs[an], lo, hi) for an, lo, hi in wr], fl, ac)
+                    for nm, rd, wr, fl, ac in raw]
+        if batched:
+            got = um.launch_batch([
+                KernelLaunch(nm, reads=rd, writes=wr, flops=fl, actor=ac)
+                for nm, rd, wr, fl, ac in resolved])
+        else:
+            got = [um.kernel(reads=rd, writes=wr, flops=fl, actor=ac, name=nm)
+                   for nm, rd, wr, fl, ac in resolved]
+        dts.append([d.hex() for d in got])
+        pre = _state(um)
+        um.sync()
+        states.append((pre, _state(um)))
+    assert dts[0] == dts[1], "per-launch modeled times diverged"
+    for section in states[0][0]:
+        assert states[0][0][section] == states[1][0][section], \
+            f"pre-sync {section} diverged"
+    for section in states[0][1]:
+        assert states[0][1][section] == states[1][1][section], \
+            f"post-sync {section} diverged"
+
+
+@pytest.mark.parametrize("kind", POLICIES)
+@pytest.mark.parametrize("seed", [1, 42, 2026, 99991])
+def test_batch_matches_sequential_warm(kind, seed):
+    """Warm tables: the certified fast path (for batched_charge policies)
+    must be indistinguishable from looping kernel()."""
+    _apply_and_compare(kind, seed, 9, warm=True)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("kind", POLICIES)
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_items=st.integers(1, 10))
+    def test_batch_matches_sequential_property(kind, seed, n_items):
+        """Property form of the identity: random batch shapes and extents."""
+        _apply_and_compare(kind, seed, n_items, warm=True)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_batch_matches_sequential_property():
+        pass
+
+
+@pytest.mark.parametrize("kind", POLICIES)
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_batch_matches_sequential_cold_fallback(kind, seed):
+    """Cold tables (unmapped pages in every hull): certification fails and
+    the conformance fallback must still be bit-identical — including the
+    placement side effects of first touch mid-batch."""
+    _apply_and_compare(kind, seed, 8, warm=False)
+
+
+@pytest.mark.parametrize("kind", POLICIES)
+def test_fast_path_engages_for_batched_policies(kind, monkeypatch):
+    """On warm tables a batch must NOT fall back for policies declaring
+    batched_charge (else the identity suite would never cover the sweep).
+    Policies without batched_charge must always fall back."""
+    um, a, b = _mk(kind)
+    _warm(um, a, b)
+    calls = []
+    orig = UnifiedMemory.kernel
+
+    def counting(self, **kw):
+        calls.append(kw.get("name"))
+        return orig(self, **kw)
+
+    monkeypatch.setattr(UnifiedMemory, "kernel", counting)
+    batch = KernelBatch()
+    batch.launch("r0", reads=[(a, 0, NB_A)])
+    batch.launch("r1", reads=[(b, 0, NB_B)], writes=[(b, 0, PS)])
+    um.launch_batch(batch)
+    if a.policy.batched_charge or a.table is None:
+        # unpaged (explicit) ranges never enter certification: the engine
+        # charges them device-local directly, so they ride the fast path
+        assert calls == [], f"{kind}: certified batch fell back"
+    else:
+        assert calls == ["r0", "r1"], f"{kind}: expected sequential fallback"
+
+
+def test_empty_and_single_item_batches():
+    um, a, b = _mk("system")
+    _warm(um, a, b)
+    assert um.launch_batch(KernelBatch()) == []
+    um2, a2, b2 = _mk("system")
+    _warm(um2, a2, b2)
+    d1 = um2.launch_batch([KernelLaunch("one", reads=[(a2, 0, NB_A)])])
+    d2 = um.kernel(reads=[(a, 0, NB_A)], name="one")
+    assert len(d1) == 1 and d1[0].hex() == d2.hex()
+    assert _state(um) == _state(um2)

@@ -1,19 +1,30 @@
-"""Ours: paged-KV serving with the umem-governed pool, plus an
-oversubscription sweep.
+"""Ours: production traffic through the UM-backed serve engine.
 
-The sweep applies the fig11 methodology (benchmarks/fig11_oversub.py) to
-serving: the KV page pool is sized to the workload's peak concurrent
-demand and the modeled device capacity is shrunk to ``pool_bytes /
-ratio`` for ratios 1x-1.75x. Under the system policy the overflow pages
-map host-side and decode reads them remotely, so the engine keeps
-serving instead of dying on ``page pool exhausted`` / OOM. Each ratio
-reports wall-clock tokens/s, modeled tokens/s and the remote-access
-share of GPU KV reads, and asserts the generated tokens are
-bit-identical to the in-memory (1.0x) run.
+Replaces the fixed oversubscription sweep with the scenario presets from
+``repro.serve.traffic`` — seeded Poisson/bursty arrivals, heavy-tail
+prompt/output lengths, multi-tenant mixes over three model configs
+(yi-6b / qwen2.5-32b / olmoe-1b-7b, reduced) — run under every
+registered memory-policy backend that can back the KV pool (PR 5
+registry). Per (scenario, policy, tenant) it reports the SLO metrics
+from ``repro.serve.metrics``: p50/p99 TTFT, per-token latency (TPOT),
+goodput under preemption, plus the remote-access share of KV reads.
 
-    PYTHONPATH=src:. python benchmarks/lm_serve_paged.py --oversub 1.5
+The ``oversubscribed`` scenario additionally asserts the generated
+tokens are bit-identical to an in-memory (1.0x) run of the same
+schedule — the paper's graceful-oversubscription claim, applied to
+serving.
 
-Env: LM_SERVE_SMOKE=1 shrinks the workload for CI smoke runs.
+    PYTHONPATH=src:. python benchmarks/lm_serve_paged.py --scenario steady
+    PYTHONPATH=src:. python benchmarks/lm_serve_paged.py --policies system,managed
+
+Env:
+  LM_SERVE_SMOKE=1   shrink the workload for CI smoke runs
+  LM_SERVE_FLOOR     'scenario/policy=TOKS_PER_S,...' — fail the run if a
+                     cell's modeled goodput drops below its floor, e.g.
+                     LM_SERVE_FLOOR='steady/system=50000'
+
+Writes BENCH_lmserve.json (benchmarks/common.py) with `_meta`
+hardware/policy stamping for the cross-PR perf trajectory.
 """
 import argparse
 import dataclasses
@@ -21,92 +32,128 @@ import os
 import sys
 import time
 
-import jax
-import numpy as np
+from repro.core import available_policies, get_hardware
+from repro.serve import SCENARIOS, TrafficSim, get_scenario, policy_supports
 
-from repro.configs import get_config
-from repro.core import TPU_V5E, UnifiedMemory
-from repro.models import init_params
-from repro.models.cache import kv_head_layout
-from repro.serve import PagedKVCache, ServeEngine
+from benchmarks.common import emit, write_json
 
-from benchmarks.common import emit
-
-PAGE_SIZE = 16
-RATIOS = (1.0, 1.25, 1.5, 1.75)
+SEED = 0
 
 
-def _workload(cfg, smoke: bool):
-    rng = np.random.default_rng(0)
-    n_req = 3 if smoke else 4
-    max_new = 8 if smoke else 12
-    prompts = [rng.integers(2, cfg.vocab_size, int(rng.integers(18, 30)))
-               for _ in range(n_req)]
-    return prompts, max_new
+def _floors() -> dict:
+    spec = os.environ.get("LM_SERVE_FLOOR", "")
+    out = {}
+    for item in spec.split(","):
+        if item.strip():
+            key, floor = item.split("=")
+            out[key.strip()] = float(floor)
+    return out
 
 
-def _pool_pages(prompts, max_new) -> int:
-    """Pages for the peak concurrent KV demand (all requests in flight)."""
-    return sum(-(-(len(p) + max_new) // PAGE_SIZE) for p in prompts) + 1
-
-
-def _serve(cfg, params, prompts, max_new, *, num_pages, device_capacity):
-    hw = dataclasses.replace(TPU_V5E, device_capacity=device_capacity)
-    um = UnifiedMemory(hw=hw)
-    eng = ServeEngine(cfg, params, max_seqs=len(prompts), max_len=128,
-                      page_size=PAGE_SIZE, num_pages=num_pages, um=um)
-    for p in prompts:
-        eng.add_request(p, max_new)
+def _run_cell(scenario_name: str, policy: str, scale: float, hw) -> dict:
+    """One (scenario, policy) traffic run -> JSON-able result row."""
+    sc = get_scenario(scenario_name, scale)
+    sim = TrafficSim(sc, policy=policy, hw=hw, seed=SEED)
     t0 = time.perf_counter()
-    out = eng.run_to_completion()
+    res = sim.run()
     wall = time.perf_counter() - t0
-    return out, eng, um, wall
+
+    if sc.oversub > 1.0:
+        # token bit-identity vs the in-memory run of the SAME schedule
+        flat = dataclasses.replace(sc, oversub=1.0)
+        base = TrafficSim(flat, policy=policy, hw=hw, seed=SEED).run()
+        assert res.tokens == base.tokens, \
+            f"{scenario_name}/{policy}: oversubscribed tokens diverged " \
+            "from the in-memory run"
+
+    m = res.metrics
+    remote = 0.0
+    preempted = 0
+    for pe in res.per_engine.values():
+        preempted += pe["stats"]["preempted"]
+        if pe["um_report"] is not None:
+            remote = max(remote, pe["um_report"]["remote_access_share"])
+    row = {
+        "tokens": m["tokens"],
+        "completed": m["completed"],
+        "goodput_tok_s": m["goodput_tok_s"],
+        "ttft_p50": m["ttft"]["p50"],
+        "ttft_p99": m["ttft"]["p99"],
+        "tpot_p50": m["tpot"]["p50"],
+        "tpot_p99": m["tpot"]["p99"],
+        "preempted": preempted,
+        "remote_share_max": remote,
+        "wall_s": wall,
+        "tenants": {t: {"ttft_p50": tm["ttft"]["p50"],
+                        "ttft_p99": tm["ttft"]["p99"],
+                        "tpot_p50": tm["tpot"]["p50"],
+                        "goodput_tok_s": tm["goodput_tok_s"],
+                        "tokens": tm["tokens"]}
+                    for t, tm in m["tenants"].items()},
+    }
+    emit(f"lm_serve/{scenario_name}/{policy}",
+         m["ttft"]["p99"] * 1e6,
+         f"tokens={m['tokens']};goodput_tok_s={m['goodput_tok_s']:.0f};"
+         f"ttft_p50_us={m['ttft']['p50'] * 1e6:.2f};"
+         f"tpot_p99_us={m['tpot']['p99'] * 1e6:.2f};"
+         f"preempted={preempted};remote_share={remote:.3f};"
+         f"wall_s={wall:.2f}")
+    for t, tm in m["tenants"].items():
+        emit(f"lm_serve/{scenario_name}/{policy}/{t}",
+             tm["ttft"]["p99"] * 1e6,
+             f"tokens={tm['tokens']};goodput_tok_s={tm['goodput_tok_s']:.0f};"
+             f"ttft_p50_us={tm['ttft']['p50'] * 1e6:.2f}")
+    return row
 
 
-def run(ratios=RATIOS):
+def run(scenarios=None, policies=None, *, policy=None, hw=None):
+    """Run the scenario x policy grid. ``policy``/``hw`` are the
+    benchmarks/run.py single-backend overrides (--policy/--hw)."""
     smoke = bool(os.environ.get("LM_SERVE_SMOKE"))
-    cfg = get_config("yi-6b").reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    prompts, max_new = _workload(cfg, smoke)
-    num_pages = _pool_pages(prompts, max_new)
-    pool_bytes = num_pages * PagedKVCache.page_bytes_for(
-        cfg, kv_head_layout(cfg, 1), PAGE_SIZE)
+    scale = 0.5 if smoke else 1.0
+    scenarios = list(scenarios or sorted(SCENARIOS))
+    if policy is not None:
+        policies = [policy]
+    if policies is None:
+        policies = [p for p in available_policies()
+                    if policy_supports(p, get_scenario("steady"))]
 
-    baseline = None
-    for ratio in ratios:
-        cap = int(pool_bytes / ratio) if ratio > 1.0 else pool_bytes
-        out, eng, um, wall = _serve(cfg, params, prompts, max_new,
-                                    num_pages=num_pages, device_capacity=cap)
-        toks = sum(len(v) for v in out.values())
-        if ratio == 1.0:
-            baseline = out
-        elif baseline is not None:
-            assert all(out[r] == baseline[r] for r in baseline), \
-                f"oversub {ratio}x diverged from the in-memory run"
-        rep = um.report()
-        tr = rep["traffic_total"]
-        emit(f"lm_serve/oversub{ratio}", wall / max(1, toks) * 1e6,
-             f"tokens={toks};tok_s={toks / wall:.1f};"
-             f"model_tok_s={toks / max(um.clock, 1e-12):.0f};"
-             f"remote_share={rep['remote_access_share']:.3f};"
-             f"preempted={eng.stats.preempted};"
-             f"kv_h2d_MB={tr['link_h2d'] / 2**20:.2f};"
-             f"pte_gpu={tr['pte_inits_gpu']}")
+    results, failures = {}, []
+    floors = _floors()
+    for name in scenarios:
+        sc = get_scenario(name)
+        for pol in policies:
+            if not policy_supports(pol, sc):
+                print(f"# lm_serve: skipping {name}/{pol} "
+                      f"(backend cannot run this scenario)")
+                continue
+            key = f"{name}/{pol}"
+            results[key] = _run_cell(name, pol, scale, hw)
+            floor = floors.get(key)
+            if floor is not None and results[key]["goodput_tok_s"] < floor:
+                failures.append(
+                    f"{key}: {results[key]['goodput_tok_s']:.0f} modeled "
+                    f"tok/s < floor {floor:.0f}")
+    write_json("lmserve", results,
+               hardware=get_hardware(hw).name, policies=policies)
+    if failures:
+        for f in failures:
+            print(f"FLOOR VIOLATION: {f}", file=sys.stderr)
+        raise RuntimeError("lm_serve goodput floor violated")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--oversub", type=float, default=None,
-                    help="run the in-memory baseline plus this pool/HBM ratio "
-                         "(default: sweep 1.0-1.75)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME", choices=sorted(SCENARIOS),
+                    help="scenario preset(s) to run (default: all); "
+                         "repeatable")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated registry backends (default: every "
+                         "backend that can back the KV pool)")
     args = ap.parse_args(argv)
-    if args.oversub is not None:
-        if args.oversub < 1.0:
-            ap.error("--oversub must be >= 1.0 (pool/HBM ratio)")
-        ratios = (1.0,) if args.oversub == 1.0 else (1.0, args.oversub)
-    else:
-        ratios = RATIOS
-    run(ratios)
+    policies = args.policies.split(",") if args.policies else None
+    run(args.scenario, policies)
     return 0
 
 

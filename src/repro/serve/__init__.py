@@ -8,7 +8,22 @@ extents ahead of its decode turn. `PagedKVCache` (paged.py) is the
 umem-governed page pool underneath — it may be allocated larger than
 device capacity, with cold pages read remotely under the system policy
 (the paper's §7 graceful oversubscription applied to serving).
-See docs/serving.md.
+The production traffic harness (traffic.py: arrival processes,
+multi-tenant scenario presets) drives the engine under realistic load
+and reports SLO metrics (metrics.py: p50/p99 TTFT, per-token latency,
+goodput). See docs/serving.md.
 """
 from repro.serve.engine import EngineStats, Request, SeqState, ServeEngine  # noqa: F401
+from repro.serve.metrics import RequestRecord, collect, summarize  # noqa: F401
 from repro.serve.paged import PagedKVCache  # noqa: F401
+from repro.serve.traffic import (  # noqa: F401
+    SCENARIOS,
+    ArrivalProcess,
+    LengthDist,
+    Scenario,
+    TenantSpec,
+    TrafficResult,
+    TrafficSim,
+    get_scenario,
+    policy_supports,
+)

@@ -35,6 +35,16 @@ overflow pages live host-side under the system policy and decode reads
 them remotely — the paper's §7 graceful oversubscription, applied to
 serving. Attention-arch only (recurrent archs serve via the dense decode
 path in models/transformer.py — their state is O(1) in sequence length).
+
+**Timing.** The engine keeps a modeled clock (:meth:`ServeEngine.now`:
+``um.clock`` under a UnifiedMemory, the step index otherwise, plus any
+idle time skipped by :meth:`ServeEngine.advance_to`). Every request
+records ``arrival_time`` at enqueue — NOT at admission — so TTFT
+(``first_token_time - arrival_time``) includes the queueing delay a
+request spends waiting for the admission gate; measuring from admission
+would understate exactly the tail the SLO metrics exist to expose.
+serve/traffic.py drives arrival processes against this clock and
+serve/metrics.py aggregates the records into SLO reports.
 """
 from __future__ import annotations
 
@@ -74,6 +84,14 @@ class Request:
     prefill_pos: int = 0  # prompt tokens whose KV is in the pool
     saved: Optional[dict] = None  # host-side KV while preempted
     preemptions: int = 0
+    tenant: str = ""
+    # modeled-clock timestamps (engine.now()); TTFT anchors at arrival_time,
+    # the enqueue instant, so pre-admission queueing delay is attributed to
+    # the request
+    arrival_time: float = 0.0
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -120,12 +138,36 @@ class ServeEngine:
         self.admit_device_fraction = admit_device_fraction
         self.stats = EngineStats()
         self._needs_prefetch: List[Request] = []
+        self._steps = 0
+        self._idle_skipped = 0.0
+
+    # ----------------------------------------------------------------- clock
+    def now(self) -> float:
+        """Modeled time: the UnifiedMemory clock when one governs the pool
+        (seconds of modeled kernel/migration time), the step index otherwise,
+        plus idle time skipped via :meth:`advance_to`."""
+        base = self.um.clock if self.um is not None else float(self._steps)
+        return base + self._idle_skipped
+
+    def advance_to(self, t: float) -> float:
+        """Fast-forward the clock to ``t`` (an arrival-driven caller skipping
+        idle time between the last completion and the next arrival). Never
+        moves time backwards. Returns now()."""
+        cur = self.now()
+        if t > cur:
+            self._idle_skipped += t - cur
+        return self.now()
 
     # ---------------------------------------------------------------- admin
-    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16, *,
+                    arrival_time: Optional[float] = None,
+                    tenant: str = "") -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self.requests[rid] = Request(rid, np.asarray(prompt), max_new_tokens)
+        # enqueue time IS the arrival: TTFT must cover pre-admission queueing
+        self.requests[rid] = Request(
+            rid, np.asarray(prompt), max_new_tokens, tenant=tenant,
+            arrival_time=self.now() if arrival_time is None else arrival_time)
         return rid
 
     def _in_state(self, state: SeqState) -> List[Request]:
@@ -180,6 +222,7 @@ class ServeEngine:
                 break
             req.sid = self.cache.new_seq()
             req.state = SeqState.PREFILL
+            req.admit_time = self.now()
             self.stats.admitted += 1
             running.append(req)
             progressed += 1
@@ -274,7 +317,12 @@ class ServeEngine:
             x = apply_norm(cfg.norm, x, self.params["final_norm"])
             logits = logits_out(cfg, self.params, x[:, -1:], pol)
             req.generated.append(int(jnp.argmax(logits[0, -1])))
+            if req.first_token_time is None:
+                req.first_token_time = self.now()
             req.state = SeqState.DECODING
+            if (len(req.generated) >= req.max_new_tokens
+                    or len(req.prompt) + len(req.generated) >= self.max_len - 1):
+                self._finish(req)
 
     # --------------------------------------------------------------- decode
     def _ensure_decode_pages(self, reqs: List[Request]) -> List[Request]:
@@ -345,9 +393,14 @@ class ServeEngine:
             r.generated.append(int(t))
             total = len(r.prompt) + len(r.generated)
             if len(r.generated) >= r.max_new_tokens or total >= self.max_len - 1:
-                r.state = SeqState.DONE
-                self.cache.release(r.sid)
-                r.sid = -1
+                self._finish(r)
+
+    def _finish(self, req: Request) -> None:
+        req.state = SeqState.DONE
+        req.finish_time = self.now()
+        if req.sid >= 0:
+            self.cache.release(req.sid)
+            req.sid = -1
 
     # ------------------------------------------------------------------ run
     def step(self) -> bool:
@@ -368,6 +421,7 @@ class ServeEngine:
         progress += self.stats.preempted - pre0
         if self.um is not None:
             self.um.sync()  # sync point: apply counter-driven delayed migrations
+        self._steps += 1
         in_flight = any(not r.done for r in self.requests.values())
         if in_flight and progress == 0:
             raise RuntimeError(

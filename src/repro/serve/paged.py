@@ -235,6 +235,13 @@ class PagedKVCache:
         return sid
 
     # ------------------------------------------------------------- umem
+    def close(self) -> None:
+        """Free the pool's UnifiedMemory allocation. Residency (host and
+        device) must return to its pre-pool baseline — the serve-path
+        clause of the policy-conformance contract pins this symmetry."""
+        if self.um is not None:
+            self.um.free(self.alloc)
+
     def _seq_page_runs(self, sid: int) -> List[Tuple[int, int]]:
         """[lo, hi) pool-page runs of the sequence, consecutive pages
         coalesced (the allocator is mostly sequential, so a sequence usually

@@ -9,3 +9,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """MAX_SKIPS=<n>: fail an otherwise-green run when more than n tests
+    skipped. CI sets this so coverage cannot silently erode — e.g. a
+    dependency (hypothesis) failing to install turns its whole property
+    suite into skips, which would otherwise still exit 0."""
+    ceiling = os.environ.get("MAX_SKIPS")
+    if ceiling is None or exitstatus != 0:
+        return
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+    if tr is None:
+        return
+    skipped = len(tr.stats.get("skipped", []))
+    if skipped > int(ceiling):
+        tr.write_line(
+            f"MAX_SKIPS exceeded: {skipped} tests skipped > ceiling "
+            f"{ceiling} — a dependency failed to install or a new skip "
+            "crept in", red=True)
+        session.exitstatus = 1

@@ -14,12 +14,16 @@ Contracts:
   maintained totals equal a from-scratch recount of every table.
 * **no charge on freed allocations** — kernel access to a freed allocation
   raises and leaves the modeled clock untouched.
+* **serve-path pool symmetry** — the KV pool keeps alloc/free symmetric
+  through a FULL serve-engine run (admission, chunked prefill,
+  paged-attention decode, release, pool close), not just a bare touch;
+  a table-less backend must be refused by the pool up front.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Actor, UnifiedMemory
+from repro.core import Actor, UnifiedMemory, make_policy
 
 KB = 1024
 NBYTES = 512 * KB
@@ -85,8 +89,68 @@ def check_no_charge_on_freed(policy) -> None:
         f"{policy.kind}: freed allocation was charged"
 
 
+def check_serve_pool_symmetry(policy, seed: int = 0) -> None:
+    """Serve-path clause: pool alloc/free symmetry through a full engine
+    run. Several requests churn through a 2-slot engine (admission,
+    chunked prefill, paged-attention decode, release); afterwards the page
+    accounting must be back to empty and closing the pool must return the
+    runtime's residency to its pre-pool baseline. Backends without a page
+    table cannot back the pool at all — the contract there is that the
+    pool refuses them up front, leaving no residency behind."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs.base import ArchConfig
+    from repro.models import init_params
+    from repro.models.cache import kv_head_layout
+    from repro.serve import PagedKVCache, ServeEngine
+
+    cfg = ArchConfig(name="contract-micro", family="dense", source="contract",
+                     num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                     head_dim=16, d_ff=64, vocab_size=64)
+    lay = kv_head_layout(cfg, 1)
+    um = UnifiedMemory()
+    base = (um.host_bytes(), um.device_bytes())
+    if not policy.paged:
+        try:
+            PagedKVCache(cfg, lay, max_seqs=2, max_len=16, page_size=4,
+                         um=um, mem_policy=policy)
+        except AssertionError:
+            assert (um.host_bytes(), um.device_bytes()) == base
+            return
+        raise AssertionError(
+            f"{policy.kind}: table-less backend accepted for the KV pool")
+    # rebuild at pool-page granularity the way PagedKVCache itself would:
+    # through the registry factory when the kind is registered (knobs stay
+    # coherent), dataclasses.replace otherwise (out-of-tree instances)
+    page_bytes = PagedKVCache.page_bytes_for(cfg, lay, 4)
+    try:
+        pool_policy = make_policy(policy.kind, page_size=page_bytes)
+    except KeyError:
+        pool_policy = dataclasses.replace(policy, page_size=page_bytes)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    eng = ServeEngine(cfg, params, max_seqs=2, max_len=24, page_size=4,
+                      num_pages=8, prefill_chunk=6, um=um,
+                      mem_policy=pool_policy)
+    rng = np.random.default_rng(seed)
+    for _ in range(4):
+        eng.add_request(rng.integers(2, cfg.vocab_size, int(rng.integers(4, 10))),
+                        max_new_tokens=3)
+    eng.run_to_completion()
+    assert eng.cache.free_pages() == eng.cache.num_pages - 1, \
+        f"{policy.kind}: KV pool pages leaked across the engine run"
+    assert not eng.cache.active.any()
+    assert (eng.cache.page_table == 0).all()
+    eng.cache.close()
+    assert (um.host_bytes(), um.device_bytes()) == base, \
+        f"{policy.kind}: serve pool residency leaked across the engine " \
+        "run + close()"
+
+
 CONTRACTS = (
     check_alloc_free_symmetry,
     check_residency_cache_matches_recount,
     check_no_charge_on_freed,
+    check_serve_pool_symmetry,
 )

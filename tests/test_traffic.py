@@ -1,0 +1,331 @@
+"""Traffic-harness invariants (serve/traffic.py + serve/metrics.py).
+
+The load-bearing guarantees of the production traffic simulator:
+
+* **same-seed bit-determinism** — a repeated run reproduces the token
+  streams AND the SLO metric report bit-for-bit, under every paged
+  policy backend;
+* **leak-free soak** — after a 1k-request run with preemption churn the
+  KV pool's page accounting is exactly back to empty;
+* **preemption/resume bit-identity** — burst load against a tight pool
+  preempts and swaps, but generates the same tokens as a roomy pool;
+* **oversubscribed token identity** — a 1.5x-oversubscribed pool serves
+  the same tokens as the in-memory run of the same schedule;
+* **TTFT anchors at arrival** — queueing delay before the admission gate
+  is part of TTFT (the serve/engine.py timing contract).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import Tier
+from repro.models import init_params
+from repro.serve import (
+    SCENARIOS,
+    ArrivalProcess,
+    LengthDist,
+    RequestRecord,
+    Scenario,
+    ServeEngine,
+    TenantSpec,
+    TrafficSim,
+    collect,
+    get_scenario,
+    policy_supports,
+    summarize,
+)
+
+POLICIES = ("system", "managed", "mi300a_unified")
+
+MICRO = ArchConfig(name="micro", family="dense", source="test",
+                   num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                   head_dim=16, d_ff=64, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def micro_model():
+    return {"micro": (MICRO, init_params(MICRO, jax.random.PRNGKey(0)))}
+
+
+def _micro_scenario(name="micro", *, n=5, tenants=2, num_pages=None,
+                    oversub=1.0, adf=0.5, max_seqs=4, max_len=48,
+                    prefill_chunk=12,
+                    arrival=ArrivalProcess("poisson", rate=2e5),
+                    prompt=LengthDist("lognormal", lo=4, hi=24, mean=10.0),
+                    output=LengthDist("lognormal", lo=1, hi=8, mean=4.0)):
+    return Scenario(
+        name=name,
+        tenants=tuple(TenantSpec(name=f"t{i}", arch="micro", num_requests=n,
+                                 arrival=arrival, prompt=prompt,
+                                 output=output)
+                      for i in range(tenants)),
+        oversub=oversub, page_size=4, max_seqs=max_seqs, max_len=max_len,
+        prefill_chunk=prefill_chunk, num_pages=num_pages,
+        admit_device_fraction=adf)
+
+
+# ------------------------------------------------------- schedule building
+def test_arrival_processes_are_seeded_and_ordered():
+    t = ArrivalProcess("poisson", rate=100.0).times(
+        np.random.default_rng(0), 50)
+    t2 = ArrivalProcess("poisson", rate=100.0).times(
+        np.random.default_rng(0), 50)
+    assert np.array_equal(t, t2)  # seeded: same rng state, same times
+    assert len(t) == 50 and (np.diff(t) > 0).all()
+    t3 = ArrivalProcess("poisson", rate=100.0).times(
+        np.random.default_rng(1), 50)
+    assert not np.array_equal(t, t3)  # the seed really drives the schedule
+
+    u = ArrivalProcess("uniform", rate=10.0).times(np.random.default_rng(0), 5)
+    assert np.allclose(np.diff(u), 0.1)
+
+    b = ArrivalProcess("bursty", rate=100.0, burst_size=8).times(
+        np.random.default_rng(0), 24)
+    assert len(b) == 24 and (np.diff(b) >= 0).all()
+    # arrivals cluster: most gaps are jitter-scale, burst boundaries are
+    # inter-arrival-scale — that bimodality is what forces queueing
+    gaps = np.diff(b)
+    assert np.median(gaps) < 1e-4 < gaps.max()
+
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        ArrivalProcess("fractal").times(np.random.default_rng(0), 4)
+
+
+def test_length_dists_clip_to_bounds():
+    rng = np.random.default_rng(0)
+    for kind in ("lognormal", "pareto"):
+        s = LengthDist(kind, lo=4, hi=24, mean=10.0).sample(rng, 500)
+        assert s.dtype == np.int64
+        assert s.min() >= 4 and s.max() <= 24
+        assert len(np.unique(s)) > 1  # a distribution, not a constant
+    f = LengthDist("fixed", lo=1, hi=64, mean=7.0).sample(rng, 8)
+    assert (f == 7).all()
+    with pytest.raises(ValueError, match="unknown length kind"):
+        LengthDist("weird").sample(rng, 4)
+
+
+# ------------------------------------------------------------ determinism
+@pytest.mark.parametrize("policy", POLICIES)
+def test_same_seed_reproduces_tokens_and_metrics(micro_model, policy):
+    """The tentpole guarantee: a same-seed run is bit-deterministic in
+    both the generated tokens and the SLO metric report."""
+    sc = _micro_scenario(n=5)
+    a = TrafficSim(sc, policy=policy, seed=3, models=micro_model).run()
+    b = TrafficSim(sc, policy=policy, seed=3, models=micro_model).run()
+    assert a.tokens == b.tokens
+    assert json.dumps(a.metrics, sort_keys=True) == \
+        json.dumps(b.metrics, sort_keys=True)
+    assert a.per_engine["micro"]["clock"] == b.per_engine["micro"]["clock"]
+    assert a.records == b.records
+
+
+def test_different_seed_changes_the_workload(micro_model):
+    sc = _micro_scenario(n=5)
+    a = TrafficSim(sc, policy="system", seed=0, models=micro_model)
+    b = TrafficSim(sc, policy="system", seed=1, models=micro_model)
+    ta = [arr.t for arr in a._arrivals["micro"]]
+    tb = [arr.t for arr in b._arrivals["micro"]]
+    assert ta != tb
+
+
+def test_tokens_match_across_policy_backends(micro_model):
+    """Memory policies change placement and timing, never the math: every
+    paged backend generates the identical token streams."""
+    sc = _micro_scenario(n=4)
+    runs = {p: TrafficSim(sc, policy=p, seed=0, models=micro_model).run()
+            for p in POLICIES}
+    tokens = [r.tokens for r in runs.values()]
+    assert all(t == tokens[0] for t in tokens[1:])
+
+
+# ------------------------------------------------------------------- soak
+@pytest.mark.parametrize("policy", POLICIES)
+def test_soak_1k_requests_no_kv_page_leak(micro_model, policy):
+    """1000 requests of bursty traffic through a pool-limited engine:
+    every page returns to the free list, no slot stays active, and the
+    metrics account for every request."""
+    sc = _micro_scenario(
+        name="soak", n=500, tenants=2, num_pages=12, max_seqs=3,
+        arrival=ArrivalProcess("bursty", rate=4e5, burst_size=8),
+        prompt=LengthDist("pareto", lo=6, hi=20, alpha=1.4),
+        output=LengthDist("lognormal", lo=2, hi=8, mean=4.0))
+    sim = TrafficSim(sc, policy=policy, seed=1, models=micro_model)
+    res = sim.run(max_steps=500_000)
+    assert res.metrics["n"] == res.metrics["completed"] == 1000
+    assert all(r.done for r in res.records)
+    cache = sim.engines["micro"].cache
+    assert cache.free_pages() == cache.num_pages - 1
+    assert not cache.active.any()
+    assert (cache.page_table == 0).all()
+    assert sorted(cache._free) == list(range(1, cache.num_pages))
+    # the churn was real: the tight pool forced preemption along the way
+    assert res.per_engine["micro"]["stats"]["preempted"] > 0
+
+
+# ------------------------------------------------ preemption / oversubscribe
+@pytest.mark.parametrize("policy", POLICIES)
+def test_burst_preemption_resume_bit_identity(micro_model, policy):
+    """Burst load against a pool that cannot hold the batch: sequences
+    preempt (KV demoted host-side) and resume, yet every token matches the
+    roomy-pool run of the same schedule."""
+    tight = _micro_scenario(
+        name="tight", n=8, tenants=2, num_pages=8, max_seqs=3,
+        arrival=ArrivalProcess("bursty", rate=4e5, burst_size=8),
+        prompt=LengthDist("pareto", lo=8, hi=20, alpha=1.4),
+        output=LengthDist("lognormal", lo=4, hi=8, mean=6.0))
+    roomy = dataclasses.replace(tight, num_pages=None)
+    a = TrafficSim(tight, policy=policy, seed=2, models=micro_model).run()
+    b = TrafficSim(roomy, policy=policy, seed=2, models=micro_model).run()
+    assert a.per_engine["micro"]["stats"]["preempted"] > 0
+    assert b.per_engine["micro"]["stats"]["preempted"] == 0
+    assert a.tokens == b.tokens
+    assert a.metrics["preemptions"] > 0
+
+
+@pytest.mark.parametrize("policy", ("system", "managed"))
+def test_oversubscribed_tokens_match_in_memory_run(micro_model, policy):
+    """KV pool 1.5x the modeled device capacity, pressure gate off: the
+    run completes with host-resident KV in play and the tokens are
+    bit-identical to the in-memory (1.0x) run of the same schedule."""
+    over = _micro_scenario(
+        name="over", n=8, tenants=2, num_pages=24, oversub=1.5, adf=0.0,
+        max_seqs=4,
+        arrival=ArrivalProcess("poisson", rate=4e5),
+        prompt=LengthDist("lognormal", lo=8, hi=32, mean=16.0, sigma=0.5),
+        output=LengthDist("lognormal", lo=2, hi=8, mean=5.0))
+    sim = TrafficSim(over, policy=policy, seed=0, models=micro_model)
+    a = sim.run()
+    b = TrafficSim(dataclasses.replace(over, oversub=1.0), policy=policy,
+                   seed=0, models=micro_model).run()
+    assert a.tokens == b.tokens
+    # capacity was genuinely shrunk below the pool footprint and respected
+    cap = int(sim.pool_bytes["micro"] / over.oversub)
+    tbl = sim.engines["micro"].cache.alloc.table
+    assert tbl.resident_bytes(Tier.DEVICE) <= cap
+    rep = a.per_engine["micro"]["um_report"]
+    if policy == "system":
+        assert rep["traffic_total"]["remote_h2d"] > 0  # read host KV remotely
+        assert rep["remote_access_share"] > 0
+
+
+def test_mi300a_cannot_run_oversubscribed(micro_model):
+    assert not policy_supports("mi300a_unified",
+                               _micro_scenario(oversub=1.5))
+    assert not policy_supports("explicit", _micro_scenario())
+    assert all(policy_supports(p, _micro_scenario()) for p in POLICIES)
+
+
+# ------------------------------------------------------------------ timing
+def test_ttft_anchors_at_arrival_not_admission(micro_model):
+    """The regression the SLO metrics exist to catch: a queued request's
+    TTFT must include the time it waited for admission. With one slot, the
+    second request queues behind the first — its TTFT strictly exceeds its
+    post-admission latency."""
+    cfg, params = micro_model["micro"]
+    eng = ServeEngine(cfg, params, max_seqs=1, max_len=32, page_size=4)
+    rng = np.random.default_rng(0)
+    r0 = eng.add_request(rng.integers(2, cfg.vocab_size, 6), 4)
+    r1 = eng.add_request(rng.integers(2, cfg.vocab_size, 6), 4)
+    eng.run_to_completion()
+    recs = {r.rid: r for r in collect(eng)}
+    for r in (recs[r0], recs[r1]):
+        assert (r.arrival_time <= r.admit_time <= r.first_token_time
+                <= r.finish_time)
+        assert r.ttft == r.first_token_time - r.arrival_time
+    assert recs[r0].queue_delay == 0.0  # the slot was free at arrival
+    assert recs[r1].admit_time > recs[r1].arrival_time
+    assert recs[r1].queue_delay > 0.0
+    assert recs[r1].ttft > recs[r0].ttft
+    assert recs[r1].ttft >= recs[r1].queue_delay
+
+
+def test_explicit_arrival_time_and_clock(micro_model):
+    cfg, params = micro_model["micro"]
+    eng = ServeEngine(cfg, params, max_seqs=2, max_len=32, page_size=4)
+    rid = eng.add_request(np.arange(2, 8), 2, arrival_time=5.0, tenant="acme")
+    assert eng.requests[rid].arrival_time == 5.0
+    assert eng.requests[rid].tenant == "acme"
+    assert eng.advance_to(10.0) == 10.0
+    assert eng.advance_to(3.0) == 10.0  # never moves backwards
+    t0 = eng.now()
+    eng.step()
+    assert eng.now() > t0  # stepping advances the modeled clock
+
+
+# ----------------------------------------------------------------- metrics
+def _rec(rid, tenant, arrival, first, finish, ntok=4, preempts=0):
+    return RequestRecord(rid=rid, tenant=tenant, prompt_len=6,
+                         new_tokens=ntok, arrival_time=arrival,
+                         admit_time=arrival + 0.5 * (first - arrival),
+                         first_token_time=first, finish_time=finish,
+                         preemptions=preempts)
+
+
+def test_summarize_slo_report():
+    recs = [_rec(0, "a", 0.0, 1.0, 4.0),
+            _rec(1, "a", 1.0, 3.0, 7.0, preempts=1),
+            _rec(2, "b", 0.0, 5.0, 9.0)]
+    m = summarize(recs, slo_ttft=2.5)
+    assert m["n"] == m["completed"] == 3
+    assert m["tokens"] == 12
+    assert m["preemptions"] == 1
+    assert m["ttft"]["p50"] == 2.0 and m["ttft"]["max"] == 5.0
+    assert m["ttft"]["p50"] <= m["ttft"]["p99"] <= m["ttft"]["max"]
+    # per-request TPOT: (4-1)/3, (7-3)/3, (9-5)/3 -> [1.0, 4/3, 4/3]
+    assert m["tpot"]["p50"] == pytest.approx(4 / 3)
+    # goodput: 12 tokens over makespan 9.0
+    assert m["goodput_tok_s"] == pytest.approx(12 / 9.0)
+    # TTFTs are (1.0, 2.0, 5.0) against a 2.5 deadline
+    assert m["slo_attainment"] == pytest.approx(2 / 3)
+    assert set(m["tenants"]) == {"a", "b"}
+    assert m["tenants"]["a"]["completed"] == 2
+    assert m["tenants"]["b"]["ttft"]["p50"] == 5.0
+    # an unfinished request counts in n but nowhere else
+    recs.append(RequestRecord(rid=3, tenant="b", prompt_len=6, new_tokens=0,
+                              arrival_time=8.0, admit_time=None,
+                              first_token_time=None, finish_time=None,
+                              preemptions=0))
+    m2 = summarize(recs)
+    assert m2["n"] == 4 and m2["completed"] == 3 and m2["tokens"] == 12
+
+
+def test_summarize_empty():
+    m = summarize([], slo_ttft=1.0)
+    assert m["n"] == 0 and m["goodput_tok_s"] == 0.0
+    assert m["slo_attainment"] == 0.0 and m["tenants"] == {}
+
+
+# ----------------------------------------------------------------- presets
+def test_scenario_presets_shape():
+    assert set(SCENARIOS) == {"steady", "burst", "oversubscribed"}
+    for name in SCENARIOS:
+        sc = get_scenario(name)
+        assert sc.name == name
+        assert len({t.arch for t in sc.tenants}) >= 3  # multi-config mix
+    ov = get_scenario("oversubscribed")
+    assert ov.oversub > 1.0
+    assert ov.admit_device_fraction == 0.0  # gate off: really oversubscribe
+    full = get_scenario("steady").tenants[0].num_requests
+    assert get_scenario("steady", 0.5).tenants[0].num_requests < full
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+def test_steady_preset_end_to_end_real_configs():
+    """The real thing, shrunk: the steady preset across three reduced
+    model configs (dense GQA / dense / MoE) through the paged-attention
+    decode path, per-tenant SLO report included."""
+    sc = get_scenario("steady", scale=0.25)
+    sim = TrafficSim(sc, policy="system", seed=0)
+    res = sim.run()
+    assert set(sim.engines) == {"yi-6b", "qwen2.5-32b", "olmoe-1b-7b"}
+    expect = sum(t.num_requests for t in sc.tenants)
+    assert res.metrics["n"] == res.metrics["completed"] == expect
+    assert set(res.metrics["tenants"]) == {t.name for t in sc.tenants}
+    assert all(len(v) > 0 for v in res.tokens.values())
+    assert res.metrics["goodput_tok_s"] > 0
+    assert res.metrics["ttft"]["p50"] > 0

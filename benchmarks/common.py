@@ -22,15 +22,18 @@ def json_dir() -> Path:
 
 
 def write_json(module: str, results: dict, *, hardware: str = "",
-               policies=()) -> Path:
+               policies=(), extra_meta: dict = None) -> Path:
     """Write a benchmark module's results as BENCH_<module>.json.
 
     ``hardware`` (HardwareModel name) and ``policies`` (the policy kinds the
     module exercised) land under a ``_meta`` key, so the cross-PR perf
-    trajectory stays attributable when runs switch memory backends."""
+    trajectory stays attributable when runs switch memory backends.
+    ``extra_meta`` merges additional keys into ``_meta`` (e.g. the cluster
+    benchmark's link topology)."""
     path = json_dir() / f"BENCH_{module}.json"
     out = dict(results)
     out["_meta"] = {"hardware": hardware,
-                    "policies": sorted(set(policies))}
+                    "policies": sorted(set(policies)),
+                    **(extra_meta or {})}
     path.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
     return path

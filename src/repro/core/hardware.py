@@ -12,6 +12,7 @@ is PCIe-class).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 
@@ -41,6 +42,13 @@ class HardwareModel:
     # managed memory under heavy oversubscription stops migrating and serves
     # faults remotely at low bandwidth (paper §7, 34-qubit case)
     managed_thrash_efficiency: float = 0.35
+
+    def with_device_capacity(self, nbytes: int) -> "HardwareModel":
+        """This model with a different device capacity — the one derived
+        rebuild the oversubscription harnesses need. Multi-node models
+        override it to keep their per-node split consistent, which is why
+        callers must go through this instead of dataclasses.replace."""
+        return dataclasses.replace(self, device_capacity=int(nbytes))
 
 
 GRACE_HOPPER = HardwareModel(

@@ -33,6 +33,29 @@ from repro.core.runs import RunMap, union_runs
 _NTIERS = 3
 
 
+def node_tier_loc(node: int, tier: "Tier") -> int:
+    """Encode a (node, tier) placement as one small int: ``2*node + tier``.
+
+    Host locations are even (0, 2, 4, ...), device locations odd (1, 3, ...),
+    UNMAPPED stays -1 — so for ``node == 0`` the encoding *is* the plain
+    Tier value, which is what makes the node dimension bit-identical at
+    N=1. The int8 RunMap payload bounds the encoding at 63 nodes."""
+    t = int(tier)
+    assert t >= 0, "cannot place a page at (node, UNMAPPED)"
+    return 2 * node + t
+
+
+def loc_node(loc: int) -> int:
+    """Node index of an encoded location (UNMAPPED -> node 0)."""
+    return max(0, int(loc)) // 2
+
+
+def loc_tier(loc: int) -> "Tier":
+    """Tier of an encoded location (parity: even = HOST, odd = DEVICE)."""
+    loc = int(loc)
+    return Tier.UNMAPPED if loc < 0 else Tier(loc & 1)
+
+
 def coalesce_runs(ids: np.ndarray):
     """Sorted unique integer ids -> maximal consecutive [lo, hi) runs.
 
@@ -72,20 +95,26 @@ class BlockTable:
     name: str
     nbytes: int
     page_size: int
+    # number of (node, tier) locations a page can occupy: a single-node
+    # table (the default) has exactly the three classic tier slots, an
+    # N-node table has 2N+1 (UNMAPPED + per-node HOST/DEVICE via
+    # node_tier_loc). Every counter below is indexed loc+1.
+    num_nodes: int = 1
 
     def __post_init__(self):
         self.num_pages = max(1, -(-self.nbytes // self.page_size))
         # bytes actually covered by the final (possibly partial) page
         self.tail_bytes = self.nbytes - (self.num_pages - 1) * self.page_size
         n = self.num_pages
+        self._nlocs = 2 * self.num_nodes + 1
         # run-compressed per-page metadata: O(runs), never O(pages)
         self._tier = RunMap(n, int(Tier.UNMAPPED), np.int8)
         self._epoch = RunMap(n, 0, np.int64)
         self._dirty = RunMap(n, 0, np.int8)
         self._gpu_counter = RunMap(n, 0, np.int64)
-        # cached per-tier residency: index int(tier)+1 -> pages / bytes
-        self._tier_pages = np.zeros(_NTIERS, np.int64)
-        self._tier_bytes = np.zeros(_NTIERS, np.int64)
+        # cached per-location residency: index int(loc)+1 -> pages / bytes
+        self._tier_pages = np.zeros(self._nlocs, np.int64)
+        self._tier_bytes = np.zeros(self._nlocs, np.int64)
         self._tier_pages[int(Tier.UNMAPPED) + 1] = n
         self._tier_bytes[int(Tier.UNMAPPED) + 1] = self.nbytes
 
@@ -149,6 +178,14 @@ class BlockTable:
 
     def resident_pages(self, tier: Tier) -> int:
         return int(self._tier_pages[int(tier) + 1])
+
+    def residency_by_side(self) -> Tuple[int, int]:
+        """(host_bytes, device_bytes) summed across nodes — the location
+        encoding puts every host slot at an odd counter index and every
+        device slot at an even one (index = loc + 1), so the sums reduce
+        to the classic two-tier totals for a single-node table."""
+        return (int(self._tier_bytes[1::2].sum()),
+                int(self._tier_bytes[2::2].sum()))
 
     def mapped_fraction(self) -> float:
         unmapped = self._tier_pages[int(Tier.UNMAPPED) + 1]
@@ -222,9 +259,9 @@ class BlockTable:
         s, e, v = self._tier.runs()
         idx = v.astype(np.int64) + 1
         pages = np.bincount(idx, weights=(e - s),
-                            minlength=_NTIERS).astype(np.int64)
+                            minlength=self._nlocs).astype(np.int64)
         nbytes = np.bincount(idx, weights=self.span_bytes(s, e),
-                             minlength=_NTIERS).astype(np.int64)
+                             minlength=self._nlocs).astype(np.int64)
         return pages, nbytes
 
     def metadata_nbytes(self) -> int:
@@ -259,10 +296,9 @@ class BlockTable:
         self._tier_bytes -= bytes_out
         self._tier_pages[k] += tot_p
         self._tier_bytes[k] += tot_b
-        host = int(Tier.HOST) + 1
-        dev = int(Tier.DEVICE) + 1
-        dh = (tot_b if k == host else 0) - int(bytes_out[host])
-        dd = (tot_b if k == dev else 0) - int(bytes_out[dev])
+        # side deltas by counter-index parity: host slots odd, device even
+        dh = (tot_b if k % 2 == 1 else 0) - int(bytes_out[1::2].sum())
+        dd = (tot_b if k % 2 == 0 and k != 0 else 0) - int(bytes_out[2::2].sum())
         return dh, dd
 
     def touch_range(self, p0: int, p1: int, epoch: int, write: bool) -> None:
@@ -321,26 +357,24 @@ class BlockTable:
         self._tier_bytes[int(Tier.UNMAPPED) + 1] -= nbytes
         self._tier_pages[int(tier) + 1] += npages
         self._tier_bytes[int(tier) + 1] += nbytes
-        if tier is Tier.HOST:
+        if int(tier) % 2 == 0:  # even locations are host-side
             return nbytes, 0
-        if tier is Tier.DEVICE:
-            return 0, nbytes
-        return 0, 0
+        return 0, nbytes
 
     def move_runs(self, starts, ends, tier: Tier) -> ResidencyDelta:
         """Retier the mapped pages of disjoint ascending [s, e) spans;
         resets their access counters (migration semantics)."""
-        pages_out = np.zeros(_NTIERS, np.int64)
-        bytes_out = np.zeros(_NTIERS, np.float64)
+        pages_out = np.zeros(self._nlocs, np.int64)
+        bytes_out = np.zeros(self._nlocs, np.float64)
         for a, b in zip(starts, ends):
             a, b = int(a), int(b)
             s, e, v = self._tier.runs(a, b)
             assert (v != int(Tier.UNMAPPED)).all(), "move of unmapped page"
             idx = v.astype(np.int64) + 1
             pages_out += np.bincount(idx, weights=(e - s),
-                                     minlength=_NTIERS).astype(np.int64)
+                                     minlength=self._nlocs).astype(np.int64)
             bytes_out += np.bincount(idx, weights=self.span_bytes(s, e),
-                                     minlength=_NTIERS)
+                                     minlength=self._nlocs)
             self._tier.set_range(a, b, int(tier))
             self._gpu_counter.set_range(a, b, 0)
         return self._shift_counters(pages_out, bytes_out.astype(np.int64), tier)

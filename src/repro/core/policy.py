@@ -122,6 +122,10 @@ class MemPolicy:
     batched_charge = False  # opt-in: charge_access folds into kernel_batch's
     # array-wide pass (see batch_ready / charge_access_batch); backends that
     # never opt in are looped through single launches, bit-identically
+    node_aware = False  # opt-in: page locations are (node, tier) encodings
+    # (see pagetable.node_tier_loc) and the runtime charges through the
+    # *_runs hooks + integer lane accounting below instead of the two-tier
+    # charge_access hooks. Single-node backends never see any of it.
 
     # ------------------------------------------------------------ lifecycle
     def on_alloc(self, um, name: str, nbytes: int) -> Allocation:
@@ -139,8 +143,9 @@ class MemPolicy:
         """Release residency and charge per-page deallocation."""
         t = a.table
         mapped = t.num_pages - t.resident_pages(Tier.UNMAPPED)
-        um._host_bytes -= t.resident_bytes(Tier.HOST)
-        um._device_bytes -= t.resident_bytes(Tier.DEVICE)
+        hb, db = t.residency_by_side()
+        um._host_bytes -= hb
+        um._device_bytes -= db
         um._charge(um.hw.dealloc_per_page * mapped)
 
     def make_staging(self, um, buf) -> Optional[Allocation]:
@@ -241,6 +246,58 @@ class MemPolicy:
         tr.link_d2h += rem_d2h + int(dev_b[~gpu].sum())
         tr.host_local += int(host_b[~gpu].sum())
         return loc, h2d, d2h, zero
+
+    # --------------------------------------------------- node-aware access
+    # Only consulted for policies with ``node_aware = True`` (the cluster
+    # backends). Locations in the page table are (node, tier) encodings;
+    # the runtime hands the *_runs hooks the run structure plus exact
+    # per-run clipped integer bytes, and the hooks return the classic
+    # (local, h2d, d2h, slow) buckets PLUS an integer lane tuple
+    # ``(nvlink_bytes, nvlink_runs, fabric_bytes, fabric_runs)`` for
+    # inter-node traffic. Lanes stay exact integers all the way through
+    # accumulation — the float conversion happens exactly once per
+    # launch/item via lanes_time / lanes_time_batch, so the sequential and
+    # batched engines stay bit-identical.
+    def charge_access_runs(self, um, a: Allocation, actor: Actor,
+                           is_write: bool, ctx, rs: np.ndarray,
+                           re_: np.ndarray, rv: np.ndarray, rb: np.ndarray,
+                           node: int):
+        """Classify one extent's per-run clipped bytes (``rb``, exact ints)
+        against the (node, tier) locations ``rv``, as seen from ``node``.
+        Returns ``(local, h2d, d2h, slow, lanes)``."""
+        raise NotImplementedError(self.kind)
+
+    def charge_access_batch_runs(self, um, a: Allocation, gpu: np.ndarray,
+                                 wr: np.ndarray, nodes: np.ndarray,
+                                 uloc: np.ndarray, nb: np.ndarray,
+                                 nr: np.ndarray):
+        """Array-wide charge_access_runs: ``nb``/``nr`` are per-(extent,
+        location) clipped bytes / overlapping-run counts, columns keyed by
+        ``uloc``. Returns per-extent ``(local, h2d, d2h, slow, lanes)``
+        int64 arrays, ``lanes`` of shape (extents, 4)."""
+        raise NotImplementedError(self.kind)
+
+    def lanes_time(self, um, lanes) -> float:
+        """Seconds for one launch's accumulated integer lane tuple."""
+        return 0.0
+
+    def lanes_time_batch(self, um, lanes):
+        """Per-item seconds for the batch's accumulated lane matrix."""
+        return 0.0
+
+    # -------------------------------------------------- placement dispatch
+    def on_demote(self, um, a: Allocation, p0: int, p1: int):
+        """Demotion dispatch: return None to use the runtime's built-in
+        device->host demotion; node-aware backends retier/charge here
+        (e.g. spilling to a remote node's host memory) and return the
+        modeled seconds they charged."""
+        return None
+
+    def on_migrate_in(self, um, a: Allocation, starts, ends):
+        """Promotion dispatch for _migrate_in_runs: return None to use the
+        built-in host->device path; node-aware backends promote toward the
+        accessing node here and return the bytes they migrated."""
+        return None
 
     # ------------------------------------------------------- pressure/sync
     def on_pressure(self, um, a: Allocation, need_bytes: int) -> None:

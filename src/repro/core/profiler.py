@@ -43,6 +43,11 @@ class MemoryProfiler:
     # different unnamed kernels never collapse into one ambiguous bucket
     kernel_times: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     kernel_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    # open-ended integer side counters (e.g. the cluster layer's inter-node
+    # byte lanes). Kept OUT of TrafficCounters on purpose: the golden parity
+    # fixture snapshots vars(TrafficCounters), so new backends extend the
+    # traffic vocabulary here without perturbing single-node snapshots.
+    extra: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     _phase: str = "default"
     # running peaks: sample() is O(1) per op (the runtime hands it cached
     # residency totals, never re-scanning per-allocation tier arrays) and
@@ -90,6 +95,7 @@ class MemoryProfiler:
             "total_time_s": self.total_time(),
             "traffic": {k: vars(v) for k, v in self.phase_traffic.items()},
             "traffic_total": vars(total),
+            "traffic_extra": dict(self.extra),
             # share of GPU kernel read bytes served remotely from host memory
             # — the oversubscription benchmarks' headline degradation metric
             # (counted at the kernel remote-access sites, so migrations and

@@ -42,7 +42,11 @@ from repro.core.policy import Allocation
 from repro.core.registry import get_hardware, make_policy
 from repro.core.umem import UnifiedMemory
 
-TRACE_VERSION = 1
+# v2 adds the optional per-kernel node pin ("nd" on kernel events, a sixth
+# element on batch items) for node-aware cluster backends; single-node
+# streams serialize identically to v1 apart from the header version, and
+# replay accepts both versions (missing node info defaults to node 0).
+TRACE_VERSION = 2
 
 
 def _open_w(path):
@@ -82,15 +86,21 @@ class TraceRecorder:
     def on_free(self, name: str) -> None:
         self._write({"t": "f", "n": name})
 
-    def on_kernel(self, name, reads, writes, flops, actor) -> None:
-        self._write({"t": "k", "n": name, "r": self._ranges(reads),
-                     "w": self._ranges(writes), "fl": float(flops),
-                     "ac": int(actor)})
+    def on_kernel(self, name, reads, writes, flops, actor, node=0) -> None:
+        ev = {"t": "k", "n": name, "r": self._ranges(reads),
+              "w": self._ranges(writes), "fl": float(flops),
+              "ac": int(actor)}
+        if node:
+            ev["nd"] = int(node)
+        self._write(ev)
 
     def on_batch(self, items: Sequence) -> None:
         self._write({"t": "kb", "it": [
             [nm, self._ranges(r), self._ranges(w), float(fl), int(ac)]
-            for nm, r, w, fl, ac in items]})
+            if not nd else
+            [nm, self._ranges(r), self._ranges(w), float(fl), int(ac),
+             int(nd)]
+            for nm, r, w, fl, ac, nd in items]})
 
     def on_sync(self) -> None:
         self._write({"t": "s"})
@@ -197,8 +207,8 @@ def replay(path, *, policy: Optional[str] = None,
         events = (json.loads(line) for line in f if line.strip())
         hdr = next(events)
         assert hdr.get("t") == "hdr", "not a trace file (missing header)"
-        assert hdr.get("v") == TRACE_VERSION, \
-            f"trace version {hdr.get('v')} != {TRACE_VERSION}"
+        assert hdr.get("v") in (1, TRACE_VERSION), \
+            f"trace version {hdr.get('v')} not in (1, {TRACE_VERSION})"
         um = UnifiedMemory(
             hw=get_hardware(hw if hw is not None else hdr.get("hw")),
             staging_page_size=int(hdr.get("sps", 64 * 1024)))
@@ -211,11 +221,13 @@ def replay(path, *, policy: Optional[str] = None,
             et = ev["t"]
             if et == "k":
                 um.kernel(reads=rz(ev["r"]), writes=rz(ev["w"]),
-                          flops=ev["fl"], actor=Actor(ev["ac"]), name=ev["n"])
+                          flops=ev["fl"], actor=Actor(ev["ac"]),
+                          name=ev["n"], node=int(ev.get("nd", 0)))
             elif et == "kb":
                 um.kernel_batch([
-                    (nm, rz(r), rz(w), fl, Actor(ac))
-                    for nm, r, w, fl, ac in ev["it"]])
+                    (it[0], rz(it[1]), rz(it[2]), it[3], Actor(it[4]),
+                     int(it[5]) if len(it) > 5 else 0)
+                    for it in ev["it"]])
             elif et == "s":
                 um.sync()
             elif et == "a":

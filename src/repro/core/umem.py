@@ -94,12 +94,15 @@ def _derived_label(reads: Sequence, writes: Sequence) -> str:
 class KernelLaunch:
     """One deferred launch inside a :class:`KernelBatch` — the same
     arguments :meth:`UnifiedMemory.launch` takes, held until the batch is
-    submitted. reads/writes accept BufferViews, UMBuffers or raw Ranges."""
+    submitted. reads/writes accept BufferViews, UMBuffers or raw Ranges.
+    ``node`` pins the issuing superchip for node-aware backends (None:
+    the runtime's ambient node at submission)."""
     name: Optional[str] = None
     reads: Sequence = ()
     writes: Sequence = ()
     flops: float = 0.0
     actor: Actor = Actor.GPU
+    node: Optional[int] = None
 
 
 class KernelBatch:
@@ -114,8 +117,10 @@ class KernelBatch:
 
     def launch(self, name: Optional[str] = None, *, reads: Sequence = (),
                writes: Sequence = (), flops: float = 0.0,
-               actor: Actor = Actor.GPU) -> "KernelBatch":
-        self.items.append(KernelLaunch(name, reads, writes, flops, actor))
+               actor: Actor = Actor.GPU,
+               node: Optional[int] = None) -> "KernelBatch":
+        self.items.append(KernelLaunch(name, reads, writes, flops, actor,
+                                       node))
         return self
 
     def __len__(self) -> int:
@@ -140,6 +145,10 @@ class UnifiedMemory:
         # BlockTable mutation; makes _sample O(1) per op)
         self._host_bytes = 0
         self._device_bytes = 0
+        # ambient superchip for node-aware backends: first-touch placement
+        # and charge classification happen "as seen from" this node. Plain
+        # single-node runs never move it off 0.
+        self._node = 0
         # optional TraceRecorder (core/trace.py): every public runtime op
         # appends one event when set; None costs a single identity check
         self._trace = None
@@ -175,9 +184,37 @@ class UnifiedMemory:
             dev += a.device_bytes_explicit
             if a.table is not None:
                 _, nbytes = a.table.recount()
-                host += int(nbytes[int(Tier.HOST) + 1])
-                dev += int(nbytes[int(Tier.DEVICE) + 1])
+                # host slots sit at odd counter indices, device at even
+                # (index = encoded location + 1); single-node tables reduce
+                # to the classic HOST/DEVICE pair
+                host += int(nbytes[1::2].sum())
+                dev += int(nbytes[2::2].sum())
         return host, dev
+
+    @contextlib.contextmanager
+    def on_node(self, node: int):
+        """Pin the ambient superchip: kernels, prefetches and first touches
+        inside the block act as issued from ``node`` (node-aware backends
+        place and charge accordingly; single-node backends ignore it)."""
+        prev, self._node = self._node, int(node)
+        try:
+            yield self
+        finally:
+            self._node = prev
+
+    def charge_transfer(self, nbytes: int, bw: float, *, latency: float = 0.0,
+                        counter: Optional[str] = None) -> float:
+        """Charge a modeled bulk transfer: ``nbytes`` at ``bw`` bytes/s plus
+        a fixed ``latency``. Bytes are attributed to the open-ended
+        ``prof.extra[counter]`` side counter (never TrafficCounters, whose
+        field set the parity fixture pins). The cluster TP-serving layer
+        charges per-token all-reduce traffic through this."""
+        dt = nbytes / bw + latency
+        self._charge(dt)
+        if counter:
+            self.prof.extra[counter] += int(nbytes)
+        self._sample()
+        return dt
 
     @contextlib.contextmanager
     def phase(self, name: str):
@@ -253,7 +290,7 @@ class UnifiedMemory:
 
     def launch(self, name: Optional[str] = None, *, reads: Sequence = (),
                writes: Sequence = (), flops: float = 0.0,
-               actor: Actor = Actor.GPU) -> float:
+               actor: Actor = Actor.GPU, node: Optional[int] = None) -> float:
         """Buffer-level kernel launch: the tracked, policy-agnostic front
         door of kernel(). reads/writes take BufferViews (``buf[i:j]``,
         ``buf.rows(lo, hi)``) or whole UMBuffers; each resolves to exactly
@@ -268,7 +305,7 @@ class UnifiedMemory:
         return self.kernel(
             reads=[_as_range(r, actor) for r in reads],
             writes=[_as_range(w, actor) for w in writes],
-            flops=flops, actor=actor, name=name)
+            flops=flops, actor=actor, name=name, node=node)
 
     def launch_batch(self, batch) -> List[float]:
         """Submit a whole batch of launches in one engine step.
@@ -283,6 +320,7 @@ class UnifiedMemory:
         items = batch.items if isinstance(batch, KernelBatch) else list(batch)
         resolved = []
         ap = resolved.append
+        amb = self._node
         for it in items:
             actor = it.actor
             name = it.name
@@ -294,7 +332,8 @@ class UnifiedMemory:
                  for r in it.reads],
                 [w if type(w) is tuple else _as_range(w, actor)
                  for w in it.writes],
-                it.flops, actor))
+                it.flops, actor,
+                amb if it.node is None else it.node))
         return self.kernel_batch(resolved)
 
     @contextlib.contextmanager
@@ -453,6 +492,9 @@ class UnifiedMemory:
         system has no migration (a single physical pool)."""
         if not a.policy.migratable:
             return 0
+        handled = a.policy.on_migrate_in(self, a, starts, ends)
+        if handled is not None:  # node-aware backends promote node-locally
+            return handled
         t = a.table
         hs, he = [], []
         for s0, e0 in zip(starts, ends):
@@ -499,10 +541,22 @@ class UnifiedMemory:
     # ---------------------------------------------------------------- kernel
     def kernel(self, *, reads: Sequence[Range] = (), writes: Sequence[Range] = (),
                flops: float = 0.0, actor: Actor = Actor.GPU,
-               name: str = "kernel") -> float:
-        """Model one kernel/loop-step. Returns modeled seconds."""
+               name: str = "kernel", node: Optional[int] = None) -> float:
+        """Model one kernel/loop-step. Returns modeled seconds. ``node``
+        pins the issuing superchip for node-aware backends; None uses the
+        ambient :meth:`on_node` node (0 outside any block)."""
+        nd = self._node if node is None else int(node)
         if self._trace is not None:
-            self._trace.on_kernel(name, reads, writes, flops, actor)
+            self._trace.on_kernel(name, reads, writes, flops, actor, nd)
+        if nd != self._node:
+            prev, self._node = self._node, nd
+            try:
+                return self._kernel_seq(reads, writes, flops, actor, name)
+            finally:
+                self._node = prev
+        return self._kernel_seq(reads, writes, flops, actor, name)
+
+    def _kernel_seq(self, reads, writes, flops, actor, name) -> float:
         self.epoch += 1
         t0 = self.clock
         tr = self.prof.traffic()
@@ -510,6 +564,10 @@ class UnifiedMemory:
         remote_h2d = 0.0
         remote_d2h = 0.0
         remote_slow = 0.0  # managed thrash-mode remote reads (low bandwidth)
+        # inter-node lanes (node-aware backends): exact integer byte/run
+        # accumulators, converted to seconds once at the end of the launch
+        lane_nvl_b = lane_nvl_n = lane_fab_b = lane_fab_n = 0
+        lane_pol = None
 
         for is_write, ranges in ((False, reads), (True, writes)):
             for a, lo, hi in ranges:
@@ -539,18 +597,37 @@ class UnifiedMemory:
                 # so the float sum is order-independent and bit-identical to
                 # the dense per-page path)
                 rs, re_, rv = t.tier_runs(p0, p1)
-                dm = rv == int(Tier.DEVICE)
-                if len(rs) == 1:  # extent fully resident on one tier
-                    tot = float(t.clipped_extent_bytes(p0, p1, lo, hi))
-                    dev_b, host_b = (tot, 0.0) if dm[0] else (0.0, tot)
+                if a.policy.node_aware:
+                    # (node, tier)-encoded locations: hand the policy the
+                    # exact per-run clipped integer bytes and let it route
+                    # local / C2C / inter-node lanes through the topology
+                    rb = t.span_bytes(rs, re_)
+                    rb[0] = t.clipped_extent_bytes(
+                        int(rs[0]), int(re_[0]), lo, hi)
+                    rb[-1] = t.clipped_extent_bytes(
+                        int(rs[-1]), int(re_[-1]), lo, hi)
+                    l_b, h2d_b, d2h_b, slow_b, lanes = \
+                        a.policy.charge_access_runs(
+                            self, a, actor, is_write, ctx, rs, re_, rv, rb,
+                            self._node)
+                    lane_nvl_b += lanes[0]
+                    lane_nvl_n += lanes[1]
+                    lane_fab_b += lanes[2]
+                    lane_fab_n += lanes[3]
+                    lane_pol = a.policy
                 else:
-                    rb = t.span_bytes(rs, re_).astype(np.float64)
-                    rb[0] = t.clipped_extent_bytes(int(rs[0]), int(re_[0]), lo, hi)
-                    rb[-1] = t.clipped_extent_bytes(int(rs[-1]), int(re_[-1]), lo, hi)
-                    dev_b = float(rb[dm].sum())
-                    host_b = float(rb[~dm].sum())
-                l_b, h2d_b, d2h_b, slow_b = a.policy.charge_access(
-                    self, a, actor, is_write, ctx, rs, re_, dm, dev_b, host_b)
+                    dm = rv == int(Tier.DEVICE)
+                    if len(rs) == 1:  # extent fully resident on one tier
+                        tot = float(t.clipped_extent_bytes(p0, p1, lo, hi))
+                        dev_b, host_b = (tot, 0.0) if dm[0] else (0.0, tot)
+                    else:
+                        rb = t.span_bytes(rs, re_).astype(np.float64)
+                        rb[0] = t.clipped_extent_bytes(int(rs[0]), int(re_[0]), lo, hi)
+                        rb[-1] = t.clipped_extent_bytes(int(rs[-1]), int(re_[-1]), lo, hi)
+                        dev_b = float(rb[dm].sum())
+                        host_b = float(rb[~dm].sum())
+                    l_b, h2d_b, d2h_b, slow_b = a.policy.charge_access(
+                        self, a, actor, is_write, ctx, rs, re_, dm, dev_b, host_b)
                 local_bytes += l_b
                 remote_h2d += h2d_b
                 remote_d2h += d2h_b
@@ -563,6 +640,11 @@ class UnifiedMemory:
                     + remote_d2h / (self.hw.link_d2h * eff)
                     + remote_slow / (self.hw.link_h2d
                                      * self.hw.managed_thrash_efficiency))
+        if lane_pol is not None:
+            # one conversion per launch over the exact integer lane totals
+            # — the batched engine applies the identical expression per item
+            t_remote += lane_pol.lanes_time(
+                self, (lane_nvl_b, lane_nvl_n, lane_fab_b, lane_fab_n))
         t_compute = flops / self.hw.flops_rate
         # async prefetch issued before this kernel overlaps with it
         t_kernel = max(t_local, t_remote, t_compute, self._pending_overlap)
@@ -577,8 +659,9 @@ class UnifiedMemory:
     def kernel_batch(self, items: Sequence) -> List[float]:
         """Model a batch of kernel steps in one engine pass.
 
-        ``items`` are ``(name, reads, writes, flops, actor)`` tuples with
-        raw Ranges (launch_batch resolves buffer views down to this). The
+        ``items`` are ``(name, reads, writes, flops, actor[, node])`` tuples
+        with raw Ranges (launch_batch resolves buffer views down to this;
+        a missing node defaults to the ambient on_node() node). The
         batch is charged in one vectorized sweep over run intersections —
         per-launch Python dispatch (range walks, per-extent tier_runs,
         profiler calls) is hoisted into array math over all extents at
@@ -599,6 +682,8 @@ class UnifiedMemory:
         * the profiler finalization loop replays _charge/_sample/
           record_kernel float-op for float-op per item.
         """
+        amb = self._node
+        items = [it if len(it) == 6 else (*it, amb) for it in items]
         if self._trace is not None:
             # one batch event; suppress inner recording (the fallback loops
             # kernel(), which would otherwise double-record every launch)
@@ -609,6 +694,49 @@ class UnifiedMemory:
             finally:
                 self._trace = saved
         return self._kernel_batch(items)
+
+    @staticmethod
+    def _batch_loc_bytes(t: BlockTable, rs, re_, rv, p0s, p1s, los, his, h1):
+        """Per-(extent, location) clipped bytes + overlapping-run counts over
+        the frozen tier runs — the node-aware generalization of the two-tier
+        device-prefix math in _kernel_batch. Columns are keyed by the sorted
+        distinct location values ``uloc``. Every entry is an exact integer
+        with span_bytes/clipped_extent_bytes semantics (tail-page and
+        boundary-clip quirks included), so downstream accumulation order
+        cannot diverge from the sequential engine."""
+        uloc = np.unique(rv)
+        col = np.searchsorted(uloc, rv)
+        K = len(uloc)
+        E = len(p0s)
+        ps = t.page_size
+        ar = np.arange(E)
+        # per-location prefix sums of full-run bytes; two searchsorteds per
+        # extent + boundary partials give bytes per (extent, location)
+        M1 = np.zeros((len(rs), K), np.int64)
+        M1[np.arange(len(rs)), col] = (re_ - rs) * ps
+        cum = np.vstack((np.zeros((1, K), np.int64),
+                         np.cumsum(M1, axis=0)))
+        ja = np.searchsorted(rs, p0s, "right") - 1
+        jb = np.searchsorted(rs, p1s, "right") - 1
+        nb = cum[jb] - cum[ja]
+        np.add.at(nb, (ar, col[jb]), (p1s - rs[jb]) * ps)
+        np.subtract.at(nb, (ar, col[ja]), (p0s - rs[ja]) * ps)
+        j1 = np.searchsorted(rs, p1s - 1, "right") - 1  # run of last page
+        if h1 == t.num_pages:
+            tm = p1s == t.num_pages
+            if tm.any():
+                np.add.at(nb, (ar[tm], col[j1][tm]), t.tail_bytes - ps)
+        # boundary clips charge against the location owning the boundary page
+        np.subtract.at(nb, (ar, col[ja]), los - p0s * ps)
+        np.subtract.at(nb, (ar, col[j1]), p1s * ps - his)
+        # overlapping-run counts per (extent, location): inter-node lanes
+        # pay a per-contiguous-transfer latency, so the policy needs counts
+        nr = np.empty((E, K), np.int64)
+        for c in range(K):
+            m = col == c
+            nr[:, c] = (np.searchsorted(rs[m], p1s, "left")
+                        - np.searchsorted(re_[m], p0s, "right"))
+        return nb, nr, uloc
 
     def _kernel_batch(self, items: Sequence) -> List[float]:
         n = len(items)
@@ -622,7 +750,7 @@ class UnifiedMemory:
         GPU = Actor.GPU
         item_gpu = np.empty(n, bool)
         flops_arr = np.empty(n, np.float64)
-        for i, (name, reads, writes, flops, actor) in enumerate(items):
+        for i, (name, reads, writes, flops, actor, nd) in enumerate(items):
             gpu = 1 if actor is GPU else 0
             item_gpu[i] = gpu
             flops_arr[i] = flops
@@ -644,7 +772,7 @@ class UnifiedMemory:
                     if g is None:
                         groups[id(a)] = g = (a, [])
                     g[1].append((lo // ps, -(-hi // ps), lo, hi, i,
-                                 is_write, gpu))
+                                 is_write, gpu, nd))
         # ---- pass 2: certify every (allocation, actor) hull ---------------
         certified = True
         prepped = []
@@ -664,14 +792,17 @@ class UnifiedMemory:
                 break
             prepped.append((a, M))
         if not certified:  # conformance fallback: the sequential engine
-            return [self.kernel(reads=r, writes=w, flops=f, actor=ac, name=nm)
-                    for nm, r, w, f, ac in items]
+            return [self.kernel(reads=r, writes=w, flops=f, actor=ac,
+                                name=nm, node=nd)
+                    for nm, r, w, f, ac, nd in items]
         # ---- fast path: one vectorized charge pass per allocation ---------
         E0 = self.epoch
         loc_item = np.zeros(n, np.float64)
         h2d_item = np.zeros(n, np.float64)
         d2h_item = np.zeros(n, np.float64)
         slow_item = np.zeros(n, np.float64)
+        lane_item = None  # (n, 4) exact-int lane accumulators, on demand
+        lane_pol = None
         for a, M in prepped:
             t = a.table
             p0s, p1s = M[:, 0], M[:, 1]
@@ -681,8 +812,26 @@ class UnifiedMemory:
             gpu = M[:, 6].astype(bool)
             h0, h1 = int(p0s.min()), int(p1s.max())
             rs, re_, rv = t.tier_runs(h0, h1)
-            dev = rv == int(Tier.DEVICE)
             ps = t.page_size
+            if a.policy.node_aware:
+                nb, nr, uloc = self._batch_loc_bytes(t, rs, re_, rv, p0s,
+                                                     p1s, los, his, h1)
+                l_b, h2d_b, d2h_b, slow_b, lanes = \
+                    a.policy.charge_access_batch_runs(
+                        self, a, gpu, wr, M[:, 7], uloc, nb, nr)
+                if lane_item is None:
+                    lane_item = np.zeros((n, 4), np.float64)
+                lane_pol = a.policy
+                for c in range(4):
+                    lane_item[:, c] += np.bincount(idx, weights=lanes[:, c],
+                                                   minlength=n)
+                loc_item += np.bincount(idx, weights=l_b, minlength=n)
+                h2d_item += np.bincount(idx, weights=h2d_b, minlength=n)
+                d2h_item += np.bincount(idx, weights=d2h_b, minlength=n)
+                slow_item += np.bincount(idx, weights=slow_b, minlength=n)
+                t.touch_batch(p0s, p1s, E0 + 1 + idx, wr)
+                continue
+            dev = rv == int(Tier.DEVICE)
             # device-byte prefix over the frozen tier runs: two searchsorteds
             # per extent replace a per-extent tier_runs walk
             cum = np.concatenate(([0], np.cumsum(
@@ -729,6 +878,10 @@ class UnifiedMemory:
         t_remote = (h2d_item / (hw.link_h2d * eff)
                     + d2h_item / (hw.link_d2h * eff)
                     + slow_item / (hw.link_h2d * hw.managed_thrash_efficiency))
+        if lane_pol is not None:
+            # same fixed-association expression as the sequential engine's
+            # per-launch lanes_time, applied per item
+            t_remote = t_remote + lane_pol.lanes_time_batch(self, lane_item)
         t_kern = np.maximum(np.maximum(t_local, t_remote),
                             flops_arr / hw.flops_rate)
         # ---- finalization: replay _charge/_sample/record_kernel exactly ---
@@ -867,6 +1020,11 @@ class UnifiedMemory:
             # promote the just-demoted pages straight back to the device
             a.pending_count -= a.pending.count_nonzero(p0, p1)
             a.pending.set_range(p0, p1, 0)
+        if a.policy.migratable:
+            handled = a.policy.on_demote(self, a, p0, p1)
+            if handled is not None:  # node-aware spill (possibly cross-node)
+                self._sample()
+                return self.clock - t0
         ds_, de_ = t.runs_of(Tier.DEVICE, p0, p1)
         if len(ds_) and a.policy.migratable:
             nbytes = int(t.span_bytes(ds_, de_).sum())
@@ -890,9 +1048,9 @@ class UnifiedMemory:
                 "policy": a.policy.kind,
                 "page_size": a.policy.page_size,
                 "device_bytes": (a.device_bytes_explicit if a.table is None
-                                 else a.table.resident_bytes(Tier.DEVICE)),
+                                 else a.table.residency_by_side()[1]),
                 "host_bytes": (0 if a.table is None
-                               else a.table.resident_bytes(Tier.HOST)),
+                               else a.table.residency_by_side()[0]),
                 "extents": (0 if a.table is None
                             else len(a.table.tier_runs()[0])),
                 "freed": a.freed,

@@ -243,6 +243,18 @@ def make_constrain(mesh, *, sequence_parallel: bool = False):
     return constrain
 
 
+def tp_shard_nodes(tp: int, nodes: int) -> Tuple[int, ...]:
+    """Superchip index per tensor-parallel rank when ``tp`` ranks spread
+    over ``nodes`` superchips: consecutive ranks pack onto a node
+    (ceil(tp/nodes) per node), so intra-node ranks share the fast C2C/
+    NVLink domain and only the inter-node boundary crosses the fabric.
+    Pure integers — the cluster serve plan and cluster benchmarks place
+    TP shards through this one mapping."""
+    assert tp >= 1 and nodes >= 1, (tp, nodes)
+    per = -(-tp // nodes)
+    return tuple(min(r // per, nodes - 1) for r in range(tp))
+
+
 def make_run_policy(mesh, *, scan_layers: bool = False, remat: bool = False,
                     attn_q_block: int = 0, attn_kv_block: int = 0,
                     sequence_parallel: bool = False,

@@ -48,6 +48,7 @@ serve/metrics.py aggregates the records into SLO reports.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Dict, List, Optional
@@ -115,7 +116,8 @@ class ServeEngine:
                  um: Optional[UnifiedMemory] = None, greedy: bool = True,
                  prefill_chunk: int = 128, watermark_pages: int = 0,
                  admit_device_fraction: float = 0.5,
-                 counter_threshold: int = 16, mem_policy=None):
+                 counter_threshold: int = 16, mem_policy=None,
+                 tp_plan=None):
         assert cfg.mixer == "attention", "paged serving targets attention archs"
         assert set(cfg.layer_kinds()) == {"attention"}, \
             "the chunked-prefill path needs homogeneous global attention"
@@ -123,11 +125,18 @@ class ServeEngine:
         self.params = params
         self.policy = policy or RunPolicy()
         self.layout = kv_head_layout(cfg, policy_tp(self.policy))
+        # tp_plan (e.g. repro.cluster.serve.ClusterTPPlan) maps sequences to
+        # serving superchips and charges per-token tensor-parallel collective
+        # traffic; it only ADDS modeled charges and node pins, so generated
+        # tokens stay bit-identical to the single-node engine
+        self.tp_plan = tp_plan
+        seq_node = (tp_plan.node_of_seq if tp_plan is not None
+                    and um is not None else None)
         self.cache = PagedKVCache(cfg, self.layout, max_seqs=max_seqs,
                                   max_len=max_len, page_size=page_size,
                                   num_pages=num_pages, um=um,
                                   counter_threshold=counter_threshold,
-                                  mem_policy=mem_policy)
+                                  mem_policy=mem_policy, seq_node=seq_node)
         self.um = um
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
@@ -229,10 +238,18 @@ class ServeEngine:
         return progressed
 
     # ---------------------------------------------------------- preemption
+    def _node_ctx(self, sid: int):
+        """Pin umem ops to the sequence's serving superchip under a TP plan
+        (node-aware pools spill/promote as seen from that node)."""
+        if self.tp_plan is not None and self.um is not None:
+            return self.um.on_node(self.tp_plan.node_of_seq(sid))
+        return contextlib.nullcontext()
+
     def _preempt(self, req: Request) -> None:
         if self.um is not None:
-            for band in self.cache.seq_views(req.sid):
-                self.um.demote(band)
+            with self._node_ctx(req.sid):
+                for band in self.cache.seq_views(req.sid):
+                    self.um.demote(band)
         req.saved = self.cache.swap_out(req.sid)
         req.sid = -1
         req.state = SeqState.PREEMPTED
@@ -254,12 +271,17 @@ class ServeEngine:
         if self.um is None or not self._needs_prefetch:
             self._needs_prefetch = []
             return
-        bands = [band
-                 for req in self._needs_prefetch if req.sid >= 0
-                 for band in self.cache.seq_views(req.sid)]
-        self._needs_prefetch = []
-        if bands:
-            self.um.prefetch_async(bands)
+        todo, self._needs_prefetch = self._needs_prefetch, []
+        # per-request issue, pinned to each sequence's serving node; the
+        # per-band charges accrue in the same order the flattened single
+        # prefetch_async call used, so single-node charges are unchanged
+        for req in todo:
+            if req.sid < 0:
+                continue
+            bands = self.cache.seq_views(req.sid)
+            if bands:
+                with self._node_ctx(req.sid):
+                    self.um.prefetch_async(bands)
 
     # -------------------------------------------------------------- prefill
     def _prefill_step(self) -> int:
@@ -312,6 +334,8 @@ class ServeEngine:
             x = x + y
         req.prefill_pos = e
         self.cache.commit_prefill(req.sid, e)
+        if self.tp_plan is not None:
+            self.tp_plan.on_prefill(self, chunk)
         self.stats.prefill_chunks += 1
         if e == len(req.prompt):
             x = apply_norm(cfg.norm, x, self.params["final_norm"])
@@ -387,6 +411,8 @@ class ServeEngine:
         logits = logits_out(cfg, self.params, x, pol)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         self.cache.commit_token(sids, pos)
+        if self.tp_plan is not None:
+            self.tp_plan.on_decode(self, len(reqs))
         self.stats.decode_batches += 1
         self.stats.decode_tokens += len(reqs)
         for r, t in zip(reqs, nxt):

@@ -46,9 +46,14 @@ class PagedKVCache:
                  page_size: int = 64, num_pages: Optional[int] = None,
                  dtype=jnp.float32, um: Optional[UnifiedMemory] = None,
                  counter_threshold: int = 16,
-                 mem_policy: "MemPolicy | str | None" = None):
+                 mem_policy: "MemPolicy | str | None" = None,
+                 seq_node=None):
         self.cfg = cfg
         self.layout = layout
+        # sid -> issuing superchip for node-aware pools (None: ambient node).
+        # Tracked launches over a sequence's pages are pinned through this,
+        # so first touch places each sequence's KV on its serving node.
+        self.seq_node = seq_node
         self.page_size = page_size
         self.max_seqs = max_seqs
         self.pages_per_seq = -(-max_len // page_size)
@@ -201,7 +206,8 @@ class PagedKVCache:
         for s in sid_list:
             views = self.seq_views(s)
             if views:
-                batch.launch(f"kv_seq{s}", reads=views, actor=Actor.GPU)
+                batch.launch(f"kv_seq{s}", reads=views, actor=Actor.GPU,
+                             node=self._node_of(s))
         if len(batch):
             self.um.launch_batch(batch)
 
@@ -260,6 +266,9 @@ class PagedKVCache:
         return [(s * self.page_bytes, e * self.page_bytes)
                 for s, e in self._seq_page_runs(sid)]
 
+    def _node_of(self, sid: int):
+        return None if self.seq_node is None else self.seq_node(sid)
+
     def _touch(self, sid: int) -> None:
         if self.um is None:
             return
@@ -267,7 +276,8 @@ class PagedKVCache:
         # every resident page of the sequence into ONE tracked launch
         views = self.seq_views(sid)
         if views:
-            self.um.launch(f"kv_seq{sid}", reads=views, actor=Actor.GPU)
+            self.um.launch(f"kv_seq{sid}", reads=views, actor=Actor.GPU,
+                           node=self._node_of(sid))
 
     # ------------------------------------------------------------- views
     def batch_view(self, sids):

@@ -250,10 +250,12 @@ class TrafficSim:
 
     def __init__(self, scenario: Scenario, *, policy: str = "system",
                  hw=None, seed: int = 0, models: Optional[dict] = None,
-                 use_um: bool = True, counter_threshold: int = 4):
+                 use_um: bool = True, counter_threshold: int = 4,
+                 tp: int = 1):
         self.scenario = scenario
         self.policy = policy
         self.seed = seed
+        self.tp = tp
         self.engines: Dict[str, ServeEngine] = {}
         self._arrivals: Dict[str, List[_Arrival]] = {}
         self.pool_bytes: Dict[str, int] = {}
@@ -273,13 +275,18 @@ class TrafficSim:
             pool_bytes = num_pages * page_bytes
             self.pool_bytes[arch] = pool_bytes
             um = None
+            tp_plan = None
             if use_um:
                 hw_model = get_hardware(hw)
                 if scenario.oversub > 1.0:
-                    hw_model = dataclasses.replace(
-                        hw_model,
-                        device_capacity=int(pool_bytes / scenario.oversub))
+                    # with_device_capacity (not dataclasses.replace): multi-
+                    # node models keep their per-node split consistent
+                    hw_model = hw_model.with_device_capacity(
+                        int(pool_bytes / scenario.oversub))
                 um = UnifiedMemory(hw=hw_model)
+                if tp > 1:
+                    from repro.cluster.serve import ClusterTPPlan
+                    tp_plan = ClusterTPPlan(tp)
             self.engines[arch] = ServeEngine(
                 cfg, params, max_seqs=scenario.max_seqs,
                 max_len=scenario.max_len, page_size=scenario.page_size,
@@ -287,7 +294,8 @@ class TrafficSim:
                 prefill_chunk=scenario.prefill_chunk,
                 counter_threshold=counter_threshold,
                 admit_device_fraction=scenario.admit_device_fraction,
-                mem_policy=policy if um is not None else None)
+                mem_policy=policy if um is not None else None,
+                tp_plan=tp_plan)
             self._arrivals[arch] = self._schedule(cfg, tenants, seed)
 
     @staticmethod

@@ -154,3 +154,111 @@ CONTRACTS = (
     check_no_charge_on_freed,
     check_serve_pool_symmetry,
 )
+
+
+# --------------------------------------------------- cluster (node-aware) clause
+# Extra invariants for node-aware backends, run on a multi-superchip
+# hardware model. The single-node CONTRACTS above already cover these
+# policies at N=1; this clause is the N>1 counterpart.
+
+def _cluster_um():
+    from repro.cluster import GH200_X2
+
+    return UnifiedMemory(hw=GH200_X2)
+
+
+def check_cluster_per_node_recount(policy, seed: int = 0) -> None:
+    """Per-node residency cache == recount: after a randomized op sequence
+    issued from rotating nodes (kernels from both actors, prefetch/demote,
+    sync), every live table's cached per-(node, tier) byte counters equal
+    a from-scratch recount of its run structure, and the global host/device
+    caches agree with the runtime's own recount."""
+    rng = np.random.default_rng(seed)
+    um = _cluster_um()
+    nn = um.hw.nodes
+    allocs = [um.alloc(f"c{i}", NBYTES, policy) for i in range(3)]
+    for _ in range(40):
+        a = allocs[int(rng.integers(len(allocs)))]
+        lo = int(rng.integers(0, NBYTES - 1)) & ~0xFFF
+        hi = min(NBYTES, lo + int(rng.integers(1, NBYTES // 4)))
+        op = int(rng.integers(5))
+        with um.on_node(int(rng.integers(nn))):
+            if op == 0:
+                um.kernel(writes=[(a, lo, hi)], actor=Actor.CPU, name="w")
+            elif op == 1:
+                um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU, name="r")
+            elif op == 2:
+                um.prefetch(a, lo, hi)
+            elif op == 3:
+                um.demote(a, lo, hi)
+            else:
+                um.sync()
+        for t in (x.table for x in allocs):
+            _, nbytes = t.recount()
+            assert np.array_equal(nbytes, t._tier_bytes), \
+                f"{policy.kind}: per-(node,tier) counters drifted from recount"
+        assert um._recompute_residency() == (um.host_bytes(),
+                                             um.device_bytes()), \
+            f"{policy.kind}: global residency drifted under multi-node ops"
+    for a in allocs:
+        um.free(a)
+    assert um._recompute_residency() == (um.host_bytes(), um.device_bytes())
+
+
+def check_cluster_per_node_alloc_free_symmetry(policy) -> None:
+    """alloc -> every node touches its own slice -> free: each node's
+    device-resident byte count returns to its pre-alloc value."""
+    from repro.cluster import device_used_on
+
+    um = _cluster_um()
+    nn = um.hw.nodes
+    base = [device_used_on(um, k) for k in range(nn)]
+    gbase = (um.host_bytes(), um.device_bytes())
+    a = um.alloc("nsym", NBYTES, policy)
+    step = NBYTES // nn
+    for k in range(nn):
+        with um.on_node(k):
+            um.kernel(writes=[(a, k * step, (k + 1) * step)],
+                      actor=Actor.GPU, name=f"touch_n{k}")
+    um.sync()
+    assert sum(device_used_on(um, k) for k in range(nn)) > sum(base), \
+        f"{policy.kind}: GPU first touch placed nothing on any device"
+    um.free(a)
+    assert [device_used_on(um, k) for k in range(nn)] == base, \
+        f"{policy.kind}: per-node device residency leaked across free"
+    assert (um.host_bytes(), um.device_bytes()) == gbase
+
+
+def check_cluster_no_internode_charge_after_free(policy) -> None:
+    """Inter-node lanes stay quiet after free: a kernel over a freed
+    allocation raises and leaves the clock AND the inter-node side
+    counters untouched."""
+    um = _cluster_um()
+    a = um.alloc("gone", NBYTES, policy)
+    with um.on_node(1):
+        um.kernel(writes=[(a, 0, NBYTES)], actor=Actor.GPU, name="far_init")
+    # node 0 reading node 1's placement crosses a link: the lanes charge
+    um.kernel(reads=[(a, 0, NBYTES)], actor=Actor.GPU, name="near_read")
+    um.sync()
+    assert um.prof.extra["internode_nvlink_bytes"] > 0, \
+        f"{policy.kind}: cross-node read never hit the inter-node NVLink lane"
+    um.free(a)
+    clock = um.clock
+    extra = dict(um.prof.extra)
+    try:
+        um.kernel(reads=[(a, 0, NBYTES)], actor=Actor.GPU,
+                  name="use_after_free")
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError(f"{policy.kind}: kernel over a freed allocation "
+                             "did not raise on the cluster model")
+    assert um.clock == clock and dict(um.prof.extra) == extra, \
+        f"{policy.kind}: freed allocation charged time or inter-node bytes"
+
+
+CLUSTER_CONTRACTS = (
+    check_cluster_per_node_recount,
+    check_cluster_per_node_alloc_free_symmetry,
+    check_cluster_no_internode_charge_after_free,
+)

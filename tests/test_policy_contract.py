@@ -25,7 +25,7 @@ from repro.core import (
 )
 from repro.core.registry import _POLICIES
 
-from policy_contract import CONTRACTS
+from policy_contract import CLUSTER_CONTRACTS, CONTRACTS
 
 KB = 1024
 
@@ -35,6 +35,27 @@ KB = 1024
 @pytest.mark.parametrize("name", available_policies())
 def test_policy_contract(name, contract):
     contract(make_policy(name, page_size=4 * KB))
+
+
+# ------------------------------------------------- cluster (node-aware) clause
+def _node_aware_policies():
+    return tuple(n for n in available_policies()
+                 if getattr(make_policy(n, page_size=4 * KB),
+                            "node_aware", False))
+
+
+@pytest.mark.parametrize("contract", CLUSTER_CONTRACTS,
+                         ids=lambda c: c.__name__)
+@pytest.mark.parametrize("name", _node_aware_policies())
+def test_cluster_policy_contract(name, contract):
+    """Node-aware backends additionally keep the per-node invariants on a
+    multi-superchip model — auto-parametrized, so a newly registered
+    cluster backend is covered the moment it sets ``node_aware``."""
+    contract(make_policy(name, page_size=4 * KB))
+
+
+def test_cluster_clause_covers_the_cluster_backends():
+    assert {"cluster_system", "cluster_striped"} <= set(_node_aware_policies())
 
 
 def test_contract_covers_mi300a():
@@ -80,12 +101,30 @@ def test_register_policy_extends_the_seam():
 
 
 def test_hardware_registry():
-    assert {"grace-hopper", "mi300a", "tpu-v5e"} <= set(available_hardware())
+    assert {"grace-hopper", "mi300a", "tpu-v5e",
+            "gh200_x2", "gh200_x4"} <= set(available_hardware())
     assert get_hardware("mi300a") is MI300A
     assert get_hardware(None) is GRACE_HOPPER
     assert get_hardware(MI300A) is MI300A
     with pytest.raises(KeyError, match="unknown hardware"):
         get_hardware("does-not-exist")
+
+
+def test_hardware_registry_is_complete():
+    """``--hw`` accepts every model the code defines: each HardwareModel
+    instance in core/hardware.py and the cluster package is registered
+    under its own name (the TPU_V5E gap that once let a defined model slip
+    out of the registry stays closed)."""
+    import repro.cluster as cluster_mod
+    import repro.core.hardware as hw_mod
+    from repro.core.hardware import HardwareModel
+
+    defined = {v.name for mod in (hw_mod, cluster_mod)
+               for v in vars(mod).values() if isinstance(v, HardwareModel)}
+    missing = defined - set(available_hardware())
+    assert not missing, f"defined but unregistered hardware models: {missing}"
+    for name in sorted(defined):
+        assert get_hardware(name).name == name
 
 
 # ----------------------------------------------------------- MI300A backend
@@ -147,3 +186,25 @@ def test_no_policy_kind_branches_outside_policy_module():
                 offenders.append(f"{f.relative_to(src_dir)}:{i}: {line.strip()}")
     assert not offenders, "policy-kind branches outside core/policy.py:\n" \
         + "\n".join(offenders)
+
+
+def test_no_topology_branches_outside_cluster():
+    """Cluster seam purity: node-identity comparisons and link-topology
+    access stay inside the cluster package, the policy hook surface
+    (core/policy.py) and the (node, tier) encoding module
+    (core/pagetable.py). The engines, serve stack and launch layer route
+    everything through MemPolicy hooks and ``um.on_node`` — no
+    ``node == ...`` or ``.topology`` branch leaks out."""
+    src_dir = pathlib.Path(repro.core.__file__).parent.parent
+    pat = re.compile(r"\bnode\s*==|\bClusterTopology\b|\.topology\b")
+    offenders = []
+    for f in sorted(src_dir.rglob("*.py")):
+        rel = f.relative_to(src_dir)
+        if rel.parts[0] == "cluster" or str(rel) in ("core/policy.py",
+                                                     "core/pagetable.py"):
+            continue
+        for i, line in enumerate(f.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, "cluster-topology branches outside the cluster " \
+        "seam:\n" + "\n".join(offenders)

@@ -6,6 +6,11 @@ the restore path device_puts each tensor with the target sharding. Writes go
 to a tmp dir + os.replace (atomic on POSIX); an async writer thread keeps the
 training loop off the I/O path with single-slot backpressure; `keep_last`
 prunes old steps after a successful commit.
+
+Integrity: the manifest records a crc32 per tensor at save time; restore
+recomputes and rejects any mismatch (or a truncated/unreadable archive,
+or a shape/dtype drift) with :class:`CheckpointCorruptError` — a corrupted
+checkpoint must fail loudly at restore, never resume training on garbage.
 """
 from __future__ import annotations
 
@@ -13,10 +18,21 @@ import json
 import os
 import shutil
 import threading
+import zipfile
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint on disk fails its integrity checks (truncated
+    archive, missing tensor, shape/dtype drift, or crc32 mismatch)."""
+
+
+def _crc32(v) -> int:
+    return zlib.crc32(np.ascontiguousarray(v).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten(tree, prefix=""):
@@ -79,7 +95,8 @@ class CheckpointManager:
         manifest = {
             "step": step,
             "keys": {k: {"shape": list(np.shape(v)),
-                         "dtype": str(np.asarray(v).dtype)} for k, v in flat.items()},
+                         "dtype": str(np.asarray(v).dtype),
+                         "crc32": _crc32(v)} for k, v in flat.items()},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -112,8 +129,33 @@ class CheckpointManager:
             step = self.latest_step()
         assert step is not None, "no checkpoint found"
         path = os.path.join(self.dir, f"step-{step:09d}")
-        with np.load(os.path.join(path, "tensors.npz")) as z:
-            flat = {k: z[k] for k in z.files}
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(path, "tensors.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except (OSError, ValueError, json.JSONDecodeError,
+                zipfile.BadZipFile, zlib.error) as e:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} unreadable: {e}") from e
+        for k, meta in manifest.get("keys", {}).items():
+            if k not in flat:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: tensor {k!r} missing from "
+                    "archive")
+            v = flat[k]
+            if (list(np.shape(v)) != list(meta["shape"])
+                    or str(v.dtype) != meta["dtype"]):
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: tensor {k!r} is "
+                    f"{v.dtype}{np.shape(v)}, manifest says "
+                    f"{meta['dtype']}{tuple(meta['shape'])}")
+            # crc32 absent = checkpoint from an older writer: shape/dtype
+            # checks still apply, content check is skipped
+            if "crc32" in meta and _crc32(v) != meta["crc32"]:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: tensor {k!r} fails its crc32 "
+                    "content check — the file was corrupted after save")
         tree = _unflatten_into(template, flat)
         if shardings is not None:
             tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)

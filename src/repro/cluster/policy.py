@@ -74,7 +74,20 @@ def device_used_on(um, node: int) -> int:
 
 
 def device_free_on(um, node: int) -> int:
+    if node in um._dead_nodes:  # lost capacity: nothing places here again
+        return 0
     return node_capacity(um) - device_used_on(um, node)
+
+
+def _lane_bw(um, topo):
+    """Effective (nvlink_bw, fabric_bw) for the inter-node lanes. A
+    fault-plan lane-degradation window multiplies the nominal numbers;
+    the ``None`` fast path leaves the charge expressions untouched so
+    fault-free runs stay bit-identical."""
+    deg = um._lane_degrade
+    if deg is None:
+        return topo.nvlink_bw, topo.fabric_bw
+    return topo.nvlink_bw * deg[0], topo.fabric_bw * deg[1]
 
 
 @dataclass(frozen=True)
@@ -207,17 +220,31 @@ class ClusterPolicy(MemPolicy):
         if not (nvl_b or nvl_n or fab_b or fab_n):
             return 0.0
         topo = um.hw.topology
-        # fixed association; lanes_time_batch applies the same expression
-        return (nvl_b / topo.nvlink_bw + topo.nvlink_latency * nvl_n
-                + fab_b / topo.fabric_bw + topo.fabric_latency * fab_n)
+        if um._lane_degrade is None:
+            # fixed association; lanes_time_batch applies the same expression
+            return (nvl_b / topo.nvlink_bw + topo.nvlink_latency * nvl_n
+                    + fab_b / topo.fabric_bw + topo.fabric_latency * fab_n)
+        nvl_bw, fab_bw = _lane_bw(um, topo)
+        um.prof.extra["degraded_nvlink_bytes"] += int(nvl_b)
+        um.prof.extra["degraded_fabric_bytes"] += int(fab_b)
+        return (nvl_b / nvl_bw + topo.nvlink_latency * nvl_n
+                + fab_b / fab_bw + topo.fabric_latency * fab_n)
 
     def lanes_time_batch(self, um, lanes):
         topo = getattr(um.hw, "topology", None)
         if topo is None:  # N=1 run on a single-node model: lanes are zero
             return 0.0
-        return (lanes[:, 0] / topo.nvlink_bw
+        if um._lane_degrade is None:
+            return (lanes[:, 0] / topo.nvlink_bw
+                    + topo.nvlink_latency * lanes[:, 1]
+                    + lanes[:, 2] / topo.fabric_bw
+                    + topo.fabric_latency * lanes[:, 3])
+        nvl_bw, fab_bw = _lane_bw(um, topo)
+        um.prof.extra["degraded_nvlink_bytes"] += int(lanes[:, 0].sum())
+        um.prof.extra["degraded_fabric_bytes"] += int(lanes[:, 2].sum())
+        return (lanes[:, 0] / nvl_bw
                 + topo.nvlink_latency * lanes[:, 1]
-                + lanes[:, 2] / topo.fabric_bw
+                + lanes[:, 2] / fab_bw
                 + topo.fabric_latency * lanes[:, 3])
 
     # -------------------------------------------------- placement dispatch
@@ -238,6 +265,8 @@ class ClusterPolicy(MemPolicy):
             nbytes = int(t.span_bytes(ds_, de_).sum())
             npages = int((de_ - ds_).sum())
             dst = (k + 1) % t.num_nodes
+            while dst != k and dst in um._dead_nodes:
+                dst = (dst + 1) % t.num_nodes  # ring-skip lost nodes
             um._apply_delta(t.move_runs(ds_, de_, 2 * dst))
             t.clear_dirty(ds_, de_)
             tr.migrated_out += nbytes
@@ -245,9 +274,12 @@ class ClusterPolicy(MemPolicy):
             um._charge(nbytes / um.hw.link_d2h
                        + um.hw.migrate_per_page * npages)
             # the cross-node hop rides the fabric on top of the C2C push
-            um._charge(nbytes / topo.fabric_bw
+            fab_bw = _lane_bw(um, topo)[1]
+            um._charge(nbytes / fab_bw
                        + topo.fabric_latency * len(ds_))
             um.prof.extra["internode_fabric_bytes"] += nbytes
+            if um._lane_degrade is not None:
+                um.prof.extra["degraded_fabric_bytes"] += nbytes
         return 0.0
 
     def on_migrate_in(self, um, a, starts, ends):
@@ -287,9 +319,12 @@ class ClusterPolicy(MemPolicy):
             um._charge(need / um.hw.link_h2d
                        + um.hw.migrate_per_page * npages)
             if k != d:  # source host memory sits on another node
-                um._charge(need / topo.fabric_bw
+                fab_bw = _lane_bw(um, topo)[1]
+                um._charge(need / fab_bw
                            + topo.fabric_latency * len(hs))
                 um.prof.extra["internode_fabric_bytes"] += need
+                if um._lane_degrade is not None:
+                    um.prof.extra["degraded_fabric_bytes"] += need
             migrated += need
         return migrated
 
@@ -330,13 +365,16 @@ class ClusterStripedPolicy(ClusterPolicy):
             return node_tier_loc(d, Tier.HOST)
         sp = max(1, self.stripe_pages)
         free = {k: device_free_on(um, k) for k in range(nn)}
+        # stripe only over surviving nodes; with none dead this reduces to
+        # the original (b // sp) % nn round-robin
+        alive = [k for k in range(nn) if k not in um._dead_nodes]
         us, ue = t.runs_of(Tier.UNMAPPED, p0, p1)
         for s0, e0 in zip(us, ue):
             b = int(s0)
             e0 = int(e0)
             while b < e0:
                 nxt = min(e0, (b // sp + 1) * sp)
-                k = (b // sp) % nn
+                k = alive[(b // sp) % len(alive)]
                 nbytes = t.range_bytes(b, nxt)
                 if nbytes <= free[k]:
                     um._apply_delta(

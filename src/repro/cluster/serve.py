@@ -21,29 +21,53 @@ TP-N run are bit-identical to the single-node engine driving the same
 schedule. (Engine decisions read the pool and ``um.device_free()``, both
 policy-governed — the acceptance test in tests/test_cluster.py pins token
 identity against the single-node run.)
+
+Fault tolerance: ``without_node`` produces the post-loss plan — the dead
+rank leaves ``ranks()``, sequence placement re-pins round-robin over the
+survivors, and the all-reduce ring shrinks to the surviving rank count.
+The engine swaps plans when a fault-plan ``node_loss`` event fires.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 ACT_BYTES = 4  # fp32 activations, matching the app/serve compute dtype
 
 
 @dataclass(frozen=True)
 class ClusterTPPlan:
-    """Tensor parallelism over ``nodes`` superchips, one TP rank per node."""
+    """Tensor parallelism over ``nodes`` superchips, one TP rank per node.
+
+    ``alive`` (None = everyone) lists the surviving ranks after node
+    losses; placement and the collective cost model run over survivors.
+    """
 
     nodes: int
+    alive: Optional[Tuple[int, ...]] = None
+
+    def ranks(self) -> Tuple[int, ...]:
+        return self.alive if self.alive is not None \
+            else tuple(range(self.nodes))
 
     def node_of_seq(self, sid: int) -> int:
-        return int(sid) % self.nodes
+        r = self.ranks()
+        return int(r[int(sid) % len(r)])
+
+    def without_node(self, node: int) -> "ClusterTPPlan":
+        """The plan after ``node`` drops out of the serving group."""
+        survivors = tuple(k for k in self.ranks() if k != int(node))
+        assert survivors, "cannot lose the last serving node"
+        return dataclasses.replace(self, alive=survivors)
 
     def allreduce_bytes_per_token(self, cfg) -> int:
         """Ring all-reduce bytes one token moves per rank: two all-reduces
         of the d_model activation per layer, 2*(N-1)/N of it on the wire."""
-        if self.nodes <= 1:
+        n = len(self.ranks())
+        if n <= 1:
             return 0
-        ring = 2 * (self.nodes - 1) / self.nodes
+        ring = 2 * (n - 1) / n
         return int(2 * cfg.num_layers * ring * cfg.d_model * ACT_BYTES)
 
     # ------------------------------------------------------- engine hooks
@@ -56,11 +80,16 @@ class ClusterTPPlan:
     def _charge(self, engine, ntokens: int) -> None:
         um = engine.um
         topo = getattr(um.hw, "topology", None) if um is not None else None
-        if topo is None or self.nodes <= 1 or ntokens <= 0:
+        if topo is None or len(self.ranks()) <= 1 or ntokens <= 0:
             return
         nbytes = ntokens * self.allreduce_bytes_per_token(engine.cfg)
+        bw = topo.nvlink_bw
+        deg = um.lane_degradation
+        if deg is not None:  # all-reduce rides the degraded NVLink lane
+            bw = bw * deg[0]
+            um.prof.extra["degraded_nvlink_bytes"] += int(nbytes)
         # one latency per all-reduce (2 per layer), paid once per step
-        um.charge_transfer(nbytes, topo.nvlink_bw,
+        um.charge_transfer(nbytes, bw,
                            latency=2 * engine.cfg.num_layers
                            * topo.nvlink_latency,
                            counter="tp_allreduce_bytes")

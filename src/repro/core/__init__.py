@@ -29,6 +29,7 @@ from repro.core.registry import (  # noqa: F401
 from repro.core.profiler import MemoryProfiler, TrafficCounters  # noqa: F401
 from repro.core.umem import (  # noqa: F401
     Allocation,
+    HostSpillError,
     KernelBatch,
     KernelLaunch,
     OutOfDeviceMemory,

@@ -85,6 +85,13 @@ class OutOfDeviceMemory(RuntimeError):
     pass
 
 
+class HostSpillError(RuntimeError):
+    """An injected host-spill failure window is active: the demote target's
+    memory cannot accept the spill (runtime/fault.py FaultPlan 'spill_fail'
+    events). Callers fall back — the serve engine drops the KV instead of
+    saving it and recomputes the sequence from its prompt."""
+
+
 @dataclass
 class Allocation:
     name: str
@@ -298,6 +305,38 @@ class MemPolicy:
         built-in host->device path; node-aware backends promote toward the
         accessing node here and return the bytes they migrated."""
         return None
+
+    def on_node_loss(self, um, a: Allocation, node: int):
+        """Superchip ``node``'s physical memory vanished (um.fail_node):
+        poison — unmap — every page of this allocation resident on its
+        host or device side and return the lost [p0, p1) page runs. The
+        data is unrecoverable; callers re-materialize contents (the serve
+        engine replays affected sequences from their prompts, mirroring
+        the trainer's checkpoint-restore). The default covers any paged
+        backend through the (node, tier) encoding — a single-node table
+        simply has no locations for ``node > 0``; table-less backends
+        lose nothing here (their device blobs are modeled node-0-pinned
+        and a node-0 loss of an explicit blob is not modeled)."""
+        t = a.table
+        if t is None:
+            return []
+        out = []
+        for loc in (2 * node, 2 * node + 1):  # (node, HOST), (node, DEVICE)
+            s, e = t.runs_of(loc)
+            if len(s) == 0:
+                continue
+            if a.pending is not None:
+                # pending migration notifications over lost pages are
+                # meaningless — the next sync must not promote ghosts
+                for r0, r1 in zip(s, e):
+                    a.pending_count -= a.pending.count_nonzero(int(r0),
+                                                               int(r1))
+                    a.pending.set_range(int(r0), int(r1), 0)
+            um._apply_delta(t.move_runs(s, e, Tier.UNMAPPED))
+            t.clear_dirty(s, e)
+            out.extend((int(r0), int(r1)) for r0, r1 in zip(s, e))
+        out.sort()
+        return out
 
     # ------------------------------------------------------- pressure/sync
     def on_pressure(self, um, a: Allocation, need_bytes: int) -> None:

@@ -51,6 +51,7 @@ from repro.core.hardware import GRACE_HOPPER, HardwareModel
 from repro.core.pagetable import Actor, BlockTable, Tier
 from repro.core.policy import (  # noqa: F401  (Allocation/OOM re-exported)
     Allocation,
+    HostSpillError,
     MemPolicy,
     OutOfDeviceMemory,
     PolicyConfig,
@@ -152,6 +153,15 @@ class UnifiedMemory:
         # optional TraceRecorder (core/trace.py): every public runtime op
         # appends one event when set; None costs a single identity check
         self._trace = None
+        # fault-injection state (runtime/fault.py FaultPlan delivers through
+        # fail_node / set_lane_degradation / set_spill_failure). All of it
+        # defaults to "no fault" at zero per-op cost: the hot paths test a
+        # None/emptiness once, exactly like _trace, so fault-free runs stay
+        # bit-identical (the parity fixture pins this)
+        self._dead_nodes: set = set()
+        self._capacity_lost = 0  # device bytes gone with dead nodes
+        self._lane_degrade: Optional[Tuple[float, float]] = None
+        self._spill_fail = False
 
     # ------------------------------------------------------------------ util
     def _charge(self, seconds: float) -> None:
@@ -172,7 +182,8 @@ class UnifiedMemory:
         return self._device_bytes
 
     def device_free(self) -> int:
-        return self.hw.device_capacity - self._device_bytes
+        return self.hw.device_capacity - self._capacity_lost \
+            - self._device_bytes
 
     def _recompute_residency(self) -> Tuple[int, int]:
         """Slow-path recount (tests assert it matches the cached totals):
@@ -201,6 +212,60 @@ class UnifiedMemory:
             yield self
         finally:
             self._node = prev
+
+    # ---------------------------------------------------------------- faults
+    def fail_node(self, node: int) -> Dict[str, List[Tuple[int, int]]]:
+        """A superchip drops out of the pool: its device capacity is gone
+        and every page resident on it — host or device side — is lost.
+        Each live allocation's policy drains the dead location through the
+        ``on_node_loss`` lifecycle hook (placement maps, residency counters
+        and pending notifications all updated); the poisoned page runs are
+        returned per allocation so consumers (the serve engine) can map
+        them back to sequences and replay. Idempotent per node."""
+        node = int(node)
+        if node in self._dead_nodes:
+            return {}
+        self._dead_nodes.add(node)
+        self._capacity_lost += int(
+            getattr(self.hw, "node_device_capacity", 0)
+            or self.hw.device_capacity)
+        lost: Dict[str, List[Tuple[int, int]]] = {}
+        pages = nbytes = 0
+        for a in self.allocs.values():
+            if a.freed:
+                continue
+            runs = a.policy.on_node_loss(self, a, node)
+            if runs:
+                lost[a.name] = runs
+                pages += sum(e - s for s, e in runs)
+                if a.table is not None:
+                    nbytes += sum(e - s for s, e in runs) * a.table.page_size
+        self.prof.extra["node_losses"] += 1
+        self.prof.extra["lost_pages"] += pages
+        self.prof.extra["lost_bytes"] += nbytes
+        self._sample()
+        return lost
+
+    def set_lane_degradation(
+            self, factors: Optional[Tuple[float, float]]) -> None:
+        """Enter/leave a degraded-lane window: ``(nvlink_factor,
+        fabric_factor)`` multiply the nominal inter-node bandwidths (<1 =
+        slower) until cleared with ``None``. Node-aware charge paths read
+        :attr:`lane_degradation`; ``None`` keeps them bit-identical to a
+        fault-free run."""
+        self._lane_degrade = (
+            None if factors is None
+            else (float(factors[0]), float(factors[1])))
+
+    @property
+    def lane_degradation(self) -> Optional[Tuple[float, float]]:
+        return self._lane_degrade
+
+    def set_spill_failure(self, flag: bool) -> None:
+        """Enter/leave a host-spill failure window: while set, ``demote``
+        of a migratable allocation raises :class:`HostSpillError` instead
+        of spilling (the serve engine falls back to drop-and-recompute)."""
+        self._spill_fail = bool(flag)
 
     def charge_transfer(self, nbytes: int, bw: float, *, latency: float = 0.0,
                         counter: Optional[str] = None) -> float:
@@ -1008,6 +1073,12 @@ class UnifiedMemory:
         BufferView in place of (Allocation, lo, hi)."""
         if lo is None:
             a, lo, hi = _as_range(a, Actor.GPU)
+        if self._spill_fail and a.policy.migratable:
+            # all-or-nothing: raise before any charge or table mutation so
+            # the caller's fallback starts from an untouched range
+            raise HostSpillError(
+                f"host spill of '{a.name}' [{lo}, {hi}) rejected: "
+                "spill-failure window active")
         if self._trace is not None:
             self._trace.on_demote(a.name, lo, hi)
         t0 = self.clock

@@ -1,3 +1,9 @@
-from repro.runtime.fault import FailureInjector, SimulatedFailure  # noqa: F401
+from repro.runtime.fault import (  # noqa: F401
+    FailureInjector,
+    FaultEvent,
+    FaultPlan,
+    SimulatedFailure,
+    poisson_steps,
+)
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
 from repro.runtime.elastic import reshard_tree  # noqa: F401

@@ -56,7 +56,7 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import UnifiedMemory
+from repro.core import HostSpillError, UnifiedMemory
 from repro.kernels.paged_attention import paged_attention
 from repro.models.attention import _causal_bias, _out_proj, _project_qkv, _sdpa
 from repro.models.cache import kv_head_layout
@@ -85,6 +85,7 @@ class Request:
     prefill_pos: int = 0  # prompt tokens whose KV is in the pool
     saved: Optional[dict] = None  # host-side KV while preempted
     preemptions: int = 0
+    recoveries: int = 0  # fault replays (KV lost, recomputed from prompt)
     tenant: str = ""
     # modeled-clock timestamps (engine.now()); TTFT anchors at arrival_time,
     # the enqueue instant, so pre-admission queueing delay is attributed to
@@ -107,6 +108,14 @@ class EngineStats:
     prefill_chunks: int = 0
     decode_batches: int = 0
     decode_tokens: int = 0
+    # fault-recovery accounting (zero in a fault-free run)
+    node_losses: int = 0
+    recovered_requests: int = 0
+    replayed_tokens: int = 0  # token work thrown away and recomputed
+    # (prefilled prompt positions + generated tokens at replay time)
+    spill_failures: int = 0
+    admission_retries: int = 0  # admissions deferred by the post-fault hold
+    lane_degraded_steps: int = 0
 
 
 class ServeEngine:
@@ -117,7 +126,8 @@ class ServeEngine:
                  prefill_chunk: int = 128, watermark_pages: int = 0,
                  admit_device_fraction: float = 0.5,
                  counter_threshold: int = 16, mem_policy=None,
-                 tp_plan=None):
+                 tp_plan=None, fault_plan=None,
+                 admit_backoff_steps: int = 2):
         assert cfg.mixer == "attention", "paged serving targets attention archs"
         assert set(cfg.layer_kinds()) == {"attention"}, \
             "the chunked-prefill path needs homogeneous global attention"
@@ -149,6 +159,25 @@ class ServeEngine:
         self._needs_prefetch: List[Request] = []
         self._steps = 0
         self._idle_skipped = 0.0
+        # fault plan (runtime/fault.py FaultPlan): a frozen, sorted schedule
+        # this engine consumes through its own cursor, so one plan can be
+        # shared across every engine of a traffic simulation. None costs a
+        # single identity check per step — fault-free runs stay bit-identical
+        if fault_plan is not None and not fault_plan:
+            fault_plan = None  # empty plan: take the zero-cost path
+        if fault_plan is not None and um is None:
+            raise ValueError(
+                "fault_plan needs a UnifiedMemory-governed engine: faults "
+                "are delivered through um.fail_node / set_lane_degradation "
+                "/ set_spill_failure")
+        self.fault_plan = fault_plan
+        self._fault_idx = 0
+        self._degrade_until = -1  # step the active lane window expires at
+        self._spill_until = -1    # step the active spill window expires at
+        self.admit_backoff_steps = max(1, admit_backoff_steps)
+        self._backoff = self.admit_backoff_steps
+        self._hold_admit = 0  # steps fresh admission stays held post-fault
+        self.draining = False
 
     # ----------------------------------------------------------------- clock
     def now(self) -> float:
@@ -227,15 +256,99 @@ class ServeEngine:
         for req in sorted(self._in_state(SeqState.PENDING), key=lambda r: r.rid):
             if self.cache.free_slots() == 0:
                 break
+            # a fault-replayed request re-enters PENDING with its admit_time
+            # already stamped; drain mode and the post-fault admission hold
+            # apply only to genuinely fresh work, and skip (not break) so a
+            # held fresh request never blocks a replayed one behind it
+            fresh = req.admit_time is None
+            if fresh and self.draining:
+                continue
+            if fresh and self._hold_admit > 0:
+                self.stats.admission_retries += 1
+                continue
             if not self._admission_ok(req, running):
                 break
             req.sid = self.cache.new_seq()
             req.state = SeqState.PREFILL
-            req.admit_time = self.now()
+            if req.admit_time is None:
+                req.admit_time = self.now()
             self.stats.admitted += 1
             running.append(req)
             progressed += 1
         return progressed
+
+    # ---------------------------------------------------------------- faults
+    def start_drain(self) -> None:
+        """Enter drain mode: in-flight requests run to completion, but no
+        fresh request is admitted (fault-replayed requests still re-enter —
+        they were already admitted once). run_to_completion then returns as
+        soon as the admitted work finishes."""
+        self.draining = True
+
+    def _apply_faults(self) -> None:
+        """Deliver the fault plan's due events for this step and expire any
+        active lane-degradation / spill-failure window."""
+        ev = self.fault_plan.events
+        while self._fault_idx < len(ev) and ev[self._fault_idx].step <= self._steps:
+            e = ev[self._fault_idx]
+            self._fault_idx += 1
+            if e.kind == "node_loss":
+                self._on_node_loss(e.node)
+            elif e.kind == "lane_degrade":
+                self.um.set_lane_degradation(
+                    (e.nvlink_factor, e.fabric_factor))
+                self._degrade_until = e.step + e.duration
+            elif e.kind == "spill_fail":
+                self.um.set_spill_failure(True)
+                self._spill_until = e.step + e.duration
+            else:
+                raise ValueError(f"unknown fault kind {e.kind!r}")
+        if self._degrade_until >= 0:
+            if self._steps >= self._degrade_until:
+                self.um.set_lane_degradation(None)
+                self._degrade_until = -1
+            else:
+                self.stats.lane_degraded_steps += 1
+        if self._spill_until >= 0 and self._steps >= self._spill_until:
+            self.um.set_spill_failure(False)
+            self._spill_until = -1
+
+    def _on_node_loss(self, node: int) -> None:
+        """A serving superchip died: poison its resident pages, shrink the
+        TP plan to the survivors, and replay every sequence whose KV pages
+        are gone. Fresh admission backs off (doubling hold) so the shrunken
+        pool re-stabilizes before taking new load."""
+        self.stats.node_losses += 1
+        lost = self.um.fail_node(node)
+        if self.tp_plan is not None:
+            self.tp_plan = self.tp_plan.without_node(node)
+            # re-pin sequence placement to the surviving ranks
+            self.cache.seq_node = self.tp_plan.node_of_seq
+        runs = lost.get(self.cache.alloc.name, [])
+        for sid in self.cache.seqs_touching_pages(runs):
+            req = next((r for r in self.requests.values()
+                        if r.sid == sid and not r.done), None)
+            if req is not None:
+                self._replay(req)
+        self._hold_admit = max(self._hold_admit, self._backoff)
+        self._backoff = min(self._backoff * 2, 64)
+
+    def _replay(self, req: Request) -> None:
+        """Drop a sequence whose KV is lost (or unsavable) and requeue it
+        for recompute from its prompt. Greedy decode is per-row batch-
+        independent, so the replayed tokens come back bit-identical to the
+        lost ones — the fault regression test pins the full stream against
+        a fault-free run."""
+        self.stats.recovered_requests += 1
+        self.stats.replayed_tokens += len(req.generated) + req.prefill_pos
+        if req.sid >= 0:
+            self.cache.release(req.sid)
+            req.sid = -1
+        req.saved = None
+        req.generated = []
+        req.prefill_pos = 0
+        req.state = SeqState.PENDING
+        req.recoveries += 1
 
     # ---------------------------------------------------------- preemption
     def _node_ctx(self, sid: int):
@@ -247,9 +360,18 @@ class ServeEngine:
 
     def _preempt(self, req: Request) -> None:
         if self.um is not None:
-            with self._node_ctx(req.sid):
-                for band in self.cache.seq_views(req.sid):
-                    self.um.demote(band)
+            try:
+                with self._node_ctx(req.sid):
+                    for band in self.cache.seq_views(req.sid):
+                        self.um.demote(band)
+            except HostSpillError:
+                # spill window active: the KV cannot be saved host-side.
+                # Fall back to dropping it and recomputing from the prompt
+                # — greedy decode replays bit-identically, so correctness
+                # survives at a recompute (not preemption) cost
+                self.stats.spill_failures += 1
+                self._replay(req)
+                return
         req.saved = self.cache.swap_out(req.sid)
         req.sid = -1
         req.state = SeqState.PREEMPTED
@@ -429,11 +551,31 @@ class ServeEngine:
             req.sid = -1
 
     # ------------------------------------------------------------------ run
+    def _in_flight(self) -> bool:
+        if self.draining:
+            # fresh never-admitted requests are not in flight while draining
+            # — they will not be admitted, so waiting on them would stall
+            return any(not r.done and not (r.state is SeqState.PENDING
+                                           and r.admit_time is None)
+                       for r in self.requests.values())
+        return any(not r.done for r in self.requests.values())
+
     def step(self) -> bool:
         """One engine step: admit/resume, chunked prefill, prefetch, decode.
         Returns True while any request is in flight."""
+        if self.fault_plan is not None:
+            self._apply_faults()
         pre0 = self.stats.preempted
-        progress = self._admit()
+        rec0 = self.stats.recovered_requests
+        progress = 0
+        if self._hold_admit > 0:
+            # the post-fault backoff window ticking down IS forward motion:
+            # held admissions land when it expires
+            self._hold_admit -= 1
+            progress += 1
+            if self._hold_admit == 0:
+                self._backoff = self.admit_backoff_steps
+        progress += self._admit()
         progress += self._prefill_step()
         decoding = self._in_state(SeqState.DECODING)
         if decoding:
@@ -443,12 +585,14 @@ class ServeEngine:
                 self._decode_batch(batch)
                 progress += len(batch)
         # a preemption frees pages for next step's admit/prefill/decode, so it
-        # counts as progress (a genuine deadlock preempts nothing either)
+        # counts as progress (a genuine deadlock preempts nothing either);
+        # likewise a fault replay requeues real work for the next step
         progress += self.stats.preempted - pre0
+        progress += self.stats.recovered_requests - rec0
         if self.um is not None:
             self.um.sync()  # sync point: apply counter-driven delayed migrations
         self._steps += 1
-        in_flight = any(not r.done for r in self.requests.values())
+        in_flight = self._in_flight()
         if in_flight and progress == 0:
             raise RuntimeError(
                 "scheduler stalled: KV pool cannot back any in-flight request "

@@ -48,6 +48,7 @@ class RequestRecord:
     first_token_time: Optional[float]
     finish_time: Optional[float]
     preemptions: int
+    recoveries: int = 0  # fault replays (KV lost, recomputed from prompt)
 
     @property
     def done(self) -> bool:
@@ -83,7 +84,8 @@ def collect(engine) -> List[RequestRecord]:
                           admit_time=r.admit_time,
                           first_token_time=r.first_token_time,
                           finish_time=r.finish_time,
-                          preemptions=r.preemptions)
+                          preemptions=r.preemptions,
+                          recoveries=r.recoveries)
             for rid, r in sorted(engine.requests.items())]
 
 
@@ -105,6 +107,7 @@ def _summary_one(records: List[RequestRecord],
         "completed": len(done),
         "tokens": sum(r.new_tokens for r in done),
         "preemptions": sum(r.preemptions for r in records),
+        "recoveries": sum(r.recoveries for r in records),
         "ttft": _dist(r.ttft for r in done),
         "queue_delay": _dist(r.queue_delay for r in done),
         "tpot": _dist(r.tpot for r in done if r.new_tokens > 1),

@@ -266,6 +266,25 @@ class PagedKVCache:
         return [(s * self.page_bytes, e * self.page_bytes)
                 for s, e in self._seq_page_runs(sid)]
 
+    def seqs_touching_pages(self, runs) -> List[int]:
+        """Active sequence ids whose pool pages intersect the given [lo, hi)
+        pool-page runs. The pool is paged at one umem page per pool page, so
+        the poisoned runs ``um.fail_node`` reports for the pool allocation
+        index pool pages directly — the engine replays the sequences this
+        returns from their prompts."""
+        if not runs:
+            return []
+        dead = np.zeros(self.num_pages, bool)
+        for s, e in runs:
+            dead[int(s):int(e)] = True
+        out = []
+        for sid in np.flatnonzero(self.active):
+            row = self.page_table[sid]
+            pids = row[row != 0]
+            if len(pids) and dead[pids].any():
+                out.append(int(sid))
+        return out
+
     def _node_of(self, sid: int):
         return None if self.seq_node is None else self.seq_node(sid)
 

@@ -251,11 +251,15 @@ class TrafficSim:
     def __init__(self, scenario: Scenario, *, policy: str = "system",
                  hw=None, seed: int = 0, models: Optional[dict] = None,
                  use_um: bool = True, counter_threshold: int = 4,
-                 tp: int = 1):
+                 tp: int = 1, fault_plan=None):
         self.scenario = scenario
         self.policy = policy
         self.seed = seed
         self.tp = tp
+        # one frozen FaultPlan shared by every engine (each keeps its own
+        # cursor), so the same schedule hits each arch's engine at the same
+        # engine-step offsets — deterministic across runs
+        self.fault_plan = fault_plan
         self.engines: Dict[str, ServeEngine] = {}
         self._arrivals: Dict[str, List[_Arrival]] = {}
         self.pool_bytes: Dict[str, int] = {}
@@ -295,7 +299,8 @@ class TrafficSim:
                 counter_threshold=counter_threshold,
                 admit_device_fraction=scenario.admit_device_fraction,
                 mem_policy=policy if um is not None else None,
-                tp_plan=tp_plan)
+                tp_plan=tp_plan,
+                fault_plan=fault_plan if um is not None else None)
             self._arrivals[arch] = self._schedule(cfg, tenants, seed)
 
     @staticmethod

@@ -257,8 +257,74 @@ def check_cluster_no_internode_charge_after_free(policy) -> None:
         f"{policy.kind}: freed allocation charged time or inter-node bytes"
 
 
+def check_cluster_node_loss_drain(policy, seed: int = 0) -> None:
+    """Fault clause: after ``um.fail_node`` poisons a node and the
+    survivors keep operating, (a) nothing is ever resident on — or charged
+    against — the dead node again, (b) every table's cached per-(node,
+    tier) counters still equal a from-scratch recount, and (c) the global
+    residency caches stay exact through the drain and a final free."""
+    from repro.cluster import device_free_on
+
+    rng = np.random.default_rng(seed)
+    um = _cluster_um()
+    nn = um.hw.nodes
+    dead = nn - 1
+    allocs = [um.alloc(f"f{i}", NBYTES, policy) for i in range(3)]
+    step = NBYTES // nn
+    for a in allocs:
+        for k in range(nn):
+            with um.on_node(k):
+                um.kernel(writes=[(a, k * step, (k + 1) * step)],
+                          actor=Actor.GPU, name=f"seed_n{k}")
+    um.sync()
+
+    lost = um.fail_node(dead)
+    assert lost, f"{policy.kind}: node loss drained no pages " \
+        "(every node first-touched its own slice)"
+
+    def dead_bytes():
+        return sum(int(a.table._tier_bytes[2 * dead + L + 1])
+                   for a in allocs for L in (0, 1))
+
+    assert dead_bytes() == 0, \
+        f"{policy.kind}: pages still resident on the dead node after drain"
+    assert device_free_on(um, dead) == 0, \
+        f"{policy.kind}: dead node still advertises placeable capacity"
+
+    alive = [k for k in range(nn) if k != dead]
+    for _ in range(30):
+        a = allocs[int(rng.integers(len(allocs)))]
+        lo = int(rng.integers(0, NBYTES - 1)) & ~0xFFF
+        hi = min(NBYTES, lo + int(rng.integers(1, NBYTES // 4)))
+        op = int(rng.integers(5))
+        with um.on_node(alive[int(rng.integers(len(alive)))]):
+            if op == 0:
+                um.kernel(writes=[(a, lo, hi)], actor=Actor.CPU, name="w")
+            elif op == 1:
+                um.kernel(reads=[(a, lo, hi)], actor=Actor.GPU, name="r")
+            elif op == 2:
+                um.prefetch(a, lo, hi)
+            elif op == 3:
+                um.demote(a, lo, hi)
+            else:
+                um.sync()
+        assert dead_bytes() == 0, \
+            f"{policy.kind}: survivor traffic landed on the dead node"
+        for t in (x.table for x in allocs):
+            _, nbytes = t.recount()
+            assert np.array_equal(nbytes, t._tier_bytes), \
+                f"{policy.kind}: counters drifted from recount post-loss"
+        assert um._recompute_residency() == (um.host_bytes(),
+                                             um.device_bytes()), \
+            f"{policy.kind}: global residency drifted after node loss"
+    for a in allocs:
+        um.free(a)
+    assert um._recompute_residency() == (um.host_bytes(), um.device_bytes())
+
+
 CLUSTER_CONTRACTS = (
     check_cluster_per_node_recount,
     check_cluster_per_node_alloc_free_symmetry,
     check_cluster_no_internode_charge_after_free,
+    check_cluster_node_loss_drain,
 )

@@ -1,0 +1,267 @@
+"""Fault-tolerant serving: node loss, lane degradation, spill failure.
+
+The recovery guarantee under test: greedy decode is per-row batch-
+independent, so a sequence whose KV is lost (dead node) or unsavable
+(spill-failure window) replays from its prompt to the exact same tokens —
+every fault run here is pinned bit-identical to a fault-free run of the
+same schedule, while the recovery counters prove the fault actually hit.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import GH200_X2, ClusterTPPlan, device_free_on
+from repro.core import Actor, UnifiedMemory, make_policy
+from repro.runtime import FailureInjector, FaultEvent, FaultPlan, poisson_steps
+
+KB = 1024
+NBYTES = 512 * KB
+
+CLUSTER_POLICIES = ("cluster_system", "cluster_striped")
+
+
+# --------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def micro_model():
+    import jax
+
+    from repro.configs.base import ArchConfig
+    from repro.models import init_params
+
+    cfg = ArchConfig(name="micro", family="dense", source="test",
+                     num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                     head_dim=16, d_ff=64, vocab_size=64)
+    return {"micro": (cfg, init_params(cfg, jax.random.PRNGKey(0)))}
+
+
+def _micro_scenario(oversub=1.0, num_pages=None):
+    from repro.serve import ArrivalProcess, LengthDist, Scenario, TenantSpec
+
+    return Scenario(
+        name="micro",
+        tenants=tuple(TenantSpec(
+            name=f"t{i}", arch="micro", num_requests=5,
+            arrival=ArrivalProcess("poisson", rate=2e5),
+            prompt=LengthDist("lognormal", lo=4, hi=24, mean=10.0),
+            output=LengthDist("lognormal", lo=1, hi=8, mean=4.0))
+            for i in range(2)),
+        oversub=oversub, page_size=4, max_seqs=4, max_len=48,
+        prefill_chunk=12, num_pages=num_pages, admit_device_fraction=0.5)
+
+
+# -------------------------------------------------------------- the plan
+def test_fault_plan_builders_sorted_and_deterministic():
+    plan = FaultPlan.node_loss([(9, 1), (3, 0)]) \
+        + FaultPlan.lane_degrade(5, 4, nvlink_factor=0.5) \
+        + FaultPlan.spill_failure(1, 2)
+    assert [e.step for e in plan.events] == [1, 3, 5, 9]
+    assert bool(plan) and not bool(FaultPlan())
+    # seeded-MTBF plans: same seed -> same schedule; never more losses
+    # than nodes - 1; dying nodes drawn without replacement
+    p1 = FaultPlan.poisson(rate=0.05, seed=11, num_nodes=4, horizon=100)
+    p2 = FaultPlan.poisson(rate=0.05, seed=11, num_nodes=4, horizon=100)
+    assert p1.events == p2.events
+    assert 1 <= len(p1.events) <= 3
+    nodes = [e.node for e in p1.events]
+    assert len(set(nodes)) == len(nodes)
+    assert all(e.kind == "node_loss" for e in p1.events)
+    # the trainer injector draws from the same schedule family
+    steps = poisson_steps(rate=0.05, seed=11, horizon=100)
+    assert [e.step for e in p1.events] == steps[:3]
+    assert FailureInjector.poisson(rate=0.05, seed=11,
+                                   horizon=100).fail_at_steps == set(steps)
+
+
+# ------------------------------------------------------------ runtime unit
+@pytest.mark.parametrize("policy", CLUSTER_POLICIES)
+def test_fail_node_poisons_pages_and_capacity(policy):
+    um = UnifiedMemory(hw=GH200_X2)
+    pol = make_policy(policy, page_size=4 * KB)
+    a = um.alloc("x", NBYTES, pol)
+    half = NBYTES // 2
+    for k in (0, 1):
+        with um.on_node(k):
+            um.kernel(writes=[(a, k * half, (k + 1) * half)],
+                      actor=Actor.GPU, name=f"init_n{k}")
+    um.sync()
+    free0 = um.device_free()
+
+    lost = um.fail_node(1)
+    assert "x" in lost and lost["x"], "node 1's resident runs must be lost"
+    # the dead node's pages are unmapped, its capacity gone, and the
+    # survivor's residency is untouched
+    t = a.table
+    assert int(t._tier_bytes[2 * 1 + 0 + 1]) == 0  # (1, HOST)
+    assert int(t._tier_bytes[2 * 1 + 1 + 1]) == 0  # (1, DEVICE)
+    assert device_free_on(um, 1) == 0
+    assert um.device_free() < free0
+    assert um.prof.extra["node_losses"] == 1
+    assert um.prof.extra["lost_pages"] > 0
+    assert um.prof.extra["lost_bytes"] > 0
+    assert um._recompute_residency() == (um.host_bytes(), um.device_bytes())
+    # idempotent: a second report of the same loss is a no-op
+    assert um.fail_node(1) == {}
+    assert um.prof.extra["node_losses"] == 1
+    um.free(a)
+
+
+def test_lane_degradation_scales_charges():
+    um = UnifiedMemory(hw=GH200_X2)
+    pol = make_policy("cluster_system", page_size=4 * KB)
+    a = um.alloc("x", NBYTES, pol)
+    with um.on_node(1):
+        um.kernel(writes=[(a, 0, NBYTES)], actor=Actor.GPU, name="init")
+    t_clean = um.kernel(reads=[(a, 0, NBYTES)], actor=Actor.GPU, node=0,
+                        name="far_clean")
+    um.set_lane_degradation((0.25, 0.25))
+    t_deg = um.kernel(reads=[(a, 0, NBYTES)], actor=Actor.GPU, node=0,
+                      name="far_degraded")
+    um.set_lane_degradation(None)
+    t_back = um.kernel(reads=[(a, 0, NBYTES)], actor=Actor.GPU, node=0,
+                       name="far_recovered")
+    topo = um.hw.topology
+    # the degraded read pays exactly the extra NVLink wire time
+    assert t_deg == pytest.approx(
+        t_clean + NBYTES / (topo.nvlink_bw * 0.25) - NBYTES / topo.nvlink_bw,
+        rel=1e-9)
+    assert t_back == pytest.approx(t_clean, rel=1e-12)
+    assert um.prof.extra["degraded_nvlink_bytes"] == NBYTES
+    um.free(a)
+
+
+# -------------------------------------------------- serve recovery (gate)
+def _completed(report):
+    return all(r.done for r in report.records)
+
+
+@pytest.mark.parametrize("policy,dead", [("cluster_system", 1),
+                                         ("cluster_striped", 0)])
+def test_node_loss_mid_decode_tokens_bit_identical(micro_model, policy, dead):
+    """The ISSUE acceptance gate: inject a single-node loss mid-decode on
+    gh200_x2 under TP-2; the engine must complete every request with
+    tokens bit-identical to a fault-free run, reporting nonzero replayed
+    tokens and lost pages. The dead node is the one actually holding KV
+    pages at the fault step (locality places on the serving node, striping
+    fills node 0's stripe first at this pool size)."""
+    from repro.serve import TrafficSim
+
+    sc = _micro_scenario()
+    base = TrafficSim(sc, policy="system", seed=3, models=micro_model).run()
+    plan = FaultPlan.node_loss([(4, dead)])
+    faulted = TrafficSim(sc, policy=policy, hw="gh200_x2", seed=3,
+                         models=micro_model, tp=2, fault_plan=plan).run()
+    assert faulted.tokens == base.tokens
+    assert _completed(faulted)
+    stats = faulted.per_engine["micro"]["stats"]
+    assert stats["node_losses"] == 1
+    assert stats["recovered_requests"] > 0
+    assert stats["replayed_tokens"] > 0
+    extra = faulted.per_engine["micro"]["um_report"]["traffic_extra"]
+    assert extra["lost_pages"] > 0 and extra["lost_bytes"] > 0
+    # recovery re-decodes the lost tokens: strictly more decode work than
+    # the fault-free TP run (modeled *time* can go either way — the
+    # survivor pays recompute but stops paying TP collectives)
+    clean = TrafficSim(sc, policy=policy, hw="gh200_x2", seed=3,
+                       models=micro_model, tp=2).run()
+    assert faulted.tokens == clean.tokens
+    assert faulted.per_engine["micro"]["stats"]["decode_tokens"] \
+        > clean.per_engine["micro"]["stats"]["decode_tokens"]
+    recs = {r.rid: r for r in faulted.records}
+    assert sum(r.recoveries for r in recs.values()) \
+        == stats["recovered_requests"]
+
+
+def test_lane_degrade_window_slows_but_preserves_tokens(micro_model):
+    from repro.serve import TrafficSim
+
+    sc = _micro_scenario()
+    clean = TrafficSim(sc, policy="cluster_system", hw="gh200_x2", seed=3,
+                       models=micro_model, tp=2).run()
+    plan = FaultPlan.lane_degrade(1, 8, nvlink_factor=0.1, fabric_factor=0.1)
+    deg = TrafficSim(sc, policy="cluster_system", hw="gh200_x2", seed=3,
+                     models=micro_model, tp=2, fault_plan=plan).run()
+    assert deg.tokens == clean.tokens
+    assert _completed(deg)
+    stats = deg.per_engine["micro"]["stats"]
+    assert stats["lane_degraded_steps"] > 0
+    assert stats["recovered_requests"] == 0  # degradation loses nothing
+    extra = deg.per_engine["micro"]["um_report"]["traffic_extra"]
+    assert extra["degraded_nvlink_bytes"] > 0
+    assert deg.per_engine["micro"]["clock"] \
+        > clean.per_engine["micro"]["clock"]
+
+
+def _tight_scenario():
+    """Burst load against a pool that cannot hold the batch — the
+    preemption-forcing shape test_traffic.py pins bit-identity for."""
+    from repro.serve import ArrivalProcess, LengthDist, Scenario, TenantSpec
+
+    return Scenario(
+        name="tight",
+        tenants=tuple(TenantSpec(
+            name=f"t{i}", arch="micro", num_requests=8,
+            arrival=ArrivalProcess("bursty", rate=4e5, burst_size=8),
+            prompt=LengthDist("pareto", lo=8, hi=20, alpha=1.4),
+            output=LengthDist("lognormal", lo=4, hi=8, mean=6.0))
+            for i in range(2)),
+        oversub=1.0, page_size=4, max_seqs=3, max_len=48,
+        prefill_chunk=12, num_pages=8, admit_device_fraction=0.5)
+
+
+def test_spill_failure_window_recovers_by_recompute(micro_model):
+    """With the pool squeezed to force preemption and host-spill failing
+    for the whole run, every preemption falls back to drop-and-recompute:
+    tokens still match the unfaulted run of the same squeezed schedule."""
+    from repro.serve import TrafficSim
+
+    sc = _tight_scenario()
+    clean = TrafficSim(sc, policy="system", seed=2, models=micro_model).run()
+    assert clean.per_engine["micro"]["stats"]["preempted"] > 0, \
+        "scenario must be tight enough to preempt"
+    plan = FaultPlan.spill_failure(0, 10_000)
+    spilled = TrafficSim(sc, policy="system", seed=2, models=micro_model,
+                         fault_plan=plan).run()
+    assert spilled.tokens == clean.tokens
+    assert _completed(spilled)
+    stats = spilled.per_engine["micro"]["stats"]
+    assert stats["spill_failures"] > 0
+    assert stats["recovered_requests"] >= stats["spill_failures"]
+    assert stats["replayed_tokens"] > 0
+
+
+def test_fault_free_run_with_empty_plan_is_bit_identical(micro_model):
+    """An installed-but-empty plan must take the zero-cost path: clock,
+    tokens and counters all bit-identical to no plan at all."""
+    from repro.serve import TrafficSim
+
+    sc = _micro_scenario()
+    a = TrafficSim(sc, policy="system", seed=3, models=micro_model).run()
+    b = TrafficSim(sc, policy="system", seed=3, models=micro_model,
+                   fault_plan=FaultPlan()).run()
+    assert a.tokens == b.tokens
+    assert a.per_engine["micro"]["clock"] == b.per_engine["micro"]["clock"]
+    assert a.per_engine["micro"]["stats"] == b.per_engine["micro"]["stats"]
+
+
+# ------------------------------------------------------------- drain mode
+def test_drain_mode_finishes_admitted_work_only(micro_model):
+    from repro.serve.engine import SeqState, ServeEngine
+
+    cfg, params = micro_model["micro"]
+    um = UnifiedMemory()
+    eng = ServeEngine(cfg, params, max_seqs=4, max_len=48, page_size=4,
+                      um=um, prefill_chunk=12)
+    rng = np.random.default_rng(0)
+    first = [eng.add_request(rng.integers(1, 64, size=6), max_new_tokens=4)
+             for _ in range(2)]
+    eng.step()  # admits the first wave
+    eng.start_drain()
+    late = [eng.add_request(rng.integers(1, 64, size=6), max_new_tokens=4)
+            for _ in range(2)]
+    eng.run_to_completion()
+    for rid in first:
+        assert eng.requests[rid].done
+        assert len(eng.requests[rid].generated) == 4
+    for rid in late:
+        r = eng.requests[rid]
+        assert r.state is SeqState.PENDING and r.admit_time is None, \
+            "drain mode must not admit fresh work"

@@ -5,16 +5,18 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorruptError, CheckpointManager
 from repro.configs import get_config
 from repro.data import DataLoader, SyntheticLM
 from repro.models import RunPolicy, init_params
-from repro.runtime import FailureInjector, StragglerMonitor, reshard_tree
+from repro.runtime import (FailureInjector, StragglerMonitor, poisson_steps,
+                           reshard_tree)
 from repro.train import Trainer, TrainerConfig, make_train_state, make_train_step
 
 
-def _setup(tmp, ckpt_every=4, fail_at=()):
+def _setup(tmp, ckpt_every=4, fail_at=(), injector=None):
     cfg = get_config("yi-6b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     state = make_train_state(cfg, params)
@@ -23,7 +25,7 @@ def _setup(tmp, ckpt_every=4, fail_at=()):
     ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
     loader = DataLoader(ds)
     cm = CheckpointManager(tmp, keep_last=2)
-    inj = FailureInjector.at(fail_at) if fail_at else None
+    inj = injector or (FailureInjector.at(fail_at) if fail_at else None)
     return cfg, Trainer(cfg, state, step, loader, ckpt=cm, ckpt_every=ckpt_every,
                         injector=inj)
 
@@ -103,6 +105,112 @@ def test_straggler_detection_and_hints():
     assert hints["w3"] <= 0.5  # slow worker told to shed microbatches
     assert hints["w0"] > 0.9
     assert mon.deadline() > 0.1
+
+
+def test_poisson_schedule_deterministic_per_seed():
+    """Same (rate, seed) -> identical schedule, different seed -> a
+    different one; the trainer injector and the serve fault plan both draw
+    from poisson_steps, so this pins the shared schedule family."""
+    a = poisson_steps(rate=0.1, seed=7, horizon=200)
+    b = poisson_steps(rate=0.1, seed=7, horizon=200)
+    assert a == b and a, "seeded Poisson schedule must be reproducible"
+    assert a == sorted(set(a)) and all(s >= 1 for s in a)
+    assert poisson_steps(rate=0.1, seed=8, horizon=200) != a
+    # the injector classmethod wraps the same steps
+    inj = FailureInjector.poisson(rate=0.1, seed=7, horizon=200)
+    assert inj.fail_at_steps == set(a)
+    # MTBF sanity: mean gap tracks 1/rate within sampling noise
+    gaps = np.diff([0] + a)
+    assert 4.0 < float(gaps.mean()) < 25.0  # nominal MTBF = 10 steps
+
+
+def test_failure_recovery_with_poisson_injector():
+    """The trainer replays bit-identically under a seeded-MTBF injector,
+    not just fixed-step schedules."""
+    inj = FailureInjector.poisson(rate=0.25, seed=1, horizon=12)
+    # seed 1 -> failures at steps {4, 5}: after the first checkpoint (step
+    # 4) and within the replayed window, so both fire and both recover
+    assert inj.fail_at_steps == {4, 5}
+    with tempfile.TemporaryDirectory() as t1, tempfile.TemporaryDirectory() as t2:
+        _, tr_plain = _setup(t1)
+        out_plain = tr_plain.run(10)
+        tr_plain.loader.close()
+
+        _, tr_fail = _setup(t2, injector=inj)
+        out_fail = tr_fail.run(10 + 8 * len(inj.fail_at_steps))
+        tr_fail.loader.close()
+
+        assert out_fail["restarts"] == len(inj.fail_at_steps)
+        plain = {h["step"]: h["loss"] for h in out_plain["history"]}
+        replayed = {h["step"]: h["loss"] for h in out_fail["history"]}
+        for s, l in plain.items():
+            assert replayed[s] == l, (s, l, replayed[s])
+
+
+def _tiny_state():
+    cfg = get_config("yi-6b").reduced()
+    return make_train_state(cfg, init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def test_restore_rejects_truncated_archive():
+    with tempfile.TemporaryDirectory() as tmp:
+        state = _tiny_state()
+        cm = CheckpointManager(tmp, async_save=False)
+        cm.save(3, state)
+        npz = os.path.join(tmp, "step-000000003", "tensors.npz")
+        with open(npz, "r+b") as f:
+            f.truncate(os.path.getsize(npz) // 2)
+        with pytest.raises(CheckpointCorruptError):
+            cm.restore(state)
+
+
+def test_restore_rejects_flipped_tensor_bytes():
+    """A bit flip that keeps the archive readable (same shape/dtype) must
+    still be caught — by the per-tensor crc32, not the structure checks."""
+    with tempfile.TemporaryDirectory() as tmp:
+        state = _tiny_state()
+        cm = CheckpointManager(tmp, async_save=False)
+        cm.save(5, state)
+        path = os.path.join(tmp, "step-000000005")
+        npz = os.path.join(path, "tensors.npz")
+        with np.load(npz) as z:
+            flat = {k: np.array(z[k]) for k in z.files}
+        victim = sorted(flat)[0]
+        v = flat[victim].reshape(-1).view(np.uint8)
+        v[0] ^= 0xFF  # same shape, same dtype, different content
+        np.savez(npz, **flat)
+        with pytest.raises(CheckpointCorruptError, match="crc32"):
+            cm.restore(state)
+        # an intact checkpoint alongside still restores fine
+        cm.save(6, state)
+        step, _ = cm.restore(state)
+        assert step == 6
+
+
+def test_restore_without_crc_still_checks_structure():
+    """Checkpoints from an older writer (no crc32 in the manifest) restore,
+    but a shape drift is still rejected."""
+    import json
+
+    with tempfile.TemporaryDirectory() as tmp:
+        state = _tiny_state()
+        cm = CheckpointManager(tmp, async_save=False)
+        cm.save(1, state)
+        man = os.path.join(tmp, "step-000000001", "manifest.json")
+        with open(man) as f:
+            manifest = json.load(f)
+        for meta in manifest["keys"].values():
+            meta.pop("crc32")
+        with open(man, "w") as f:
+            json.dump(manifest, f)
+        step, restored = cm.restore(state)  # no crc -> content check skipped
+        assert step == 1
+        victim = sorted(manifest["keys"])[0]
+        manifest["keys"][victim]["shape"] = [1, 2, 3]
+        with open(man, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(CheckpointCorruptError):
+            cm.restore(state)
 
 
 def test_data_pipeline_determinism_and_resume():

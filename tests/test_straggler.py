@@ -1,0 +1,80 @@
+"""StragglerMonitor: detection, deadline and rebalance hints.
+
+Simulated per-worker step times drive the monitor the way the coordinator
+would at scale: uniform workers stay clean, a slow worker trips the
+median + k*MAD detector, the deadline tracks the healthy median, and the
+rebalance hint shrinks exactly the slow worker's share.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import StragglerMonitor
+
+
+def _feed(mon, worker, times):
+    for t in times:
+        mon.record(worker, t)
+
+
+def test_uniform_workers_no_stragglers():
+    mon = StragglerMonitor()
+    rng = np.random.default_rng(0)
+    for w in ("w0", "w1", "w2", "w3"):
+        _feed(mon, w, 1.0 + 0.01 * rng.standard_normal(16))
+    assert mon.stragglers() == []
+
+
+def test_slow_worker_flagged():
+    mon = StragglerMonitor()
+    rng = np.random.default_rng(1)
+    for w in ("w0", "w1", "w2"):
+        _feed(mon, w, 1.0 + 0.01 * rng.standard_normal(16))
+    _feed(mon, "slow", 1.0 + 0.01 * rng.standard_normal(12))
+    _feed(mon, "slow", [3.0, 3.1, 2.9, 3.0])  # recent window goes bad
+    assert mon.stragglers() == ["slow"]
+
+
+def test_recovered_worker_unflagged():
+    mon = StragglerMonitor(window=8)
+    for w in ("w0", "w1", "w2"):
+        _feed(mon, w, [1.0] * 8)
+    _feed(mon, "flaky", [3.0] * 4)
+    assert "flaky" in mon.stragglers()
+    # the rolling window forgets the bad stretch once healthy times return
+    _feed(mon, "flaky", [1.0] * 8)
+    assert mon.stragglers() == []
+
+
+def test_deadline_tracks_median_times_slack():
+    mon = StragglerMonitor(deadline_slack=2.0)
+    for w in ("w0", "w1"):
+        _feed(mon, w, [1.0] * 8)
+    assert mon.deadline() == pytest.approx(2.0)
+    mon2 = StragglerMonitor(deadline_slack=3.0)
+    _feed(mon2, "w0", [0.5] * 8)
+    assert mon2.deadline() == pytest.approx(1.5)
+
+
+def test_empty_monitor_is_safe():
+    mon = StragglerMonitor()
+    assert mon.stragglers() == []
+    assert mon.deadline() == 0.0
+    assert mon.rebalance_hint() == {}
+
+
+def test_rebalance_hint_shrinks_only_the_slow_worker():
+    mon = StragglerMonitor()
+    for w in ("w0", "w1", "w2"):
+        _feed(mon, w, [1.0] * 8)
+    _feed(mon, "slow", [2.0] * 8)
+    hints = mon.rebalance_hint()
+    assert hints["w0"] == pytest.approx(1.0)
+    assert hints["w1"] == pytest.approx(1.0)
+    assert hints["slow"] == pytest.approx(0.5)
+    # the suggested share is floored: a pathological worker never drops
+    # below a quarter of its microbatches
+    mon2 = StragglerMonitor()
+    for w in ("w0", "w1", "w2"):
+        _feed(mon2, w, [1.0] * 8)
+    _feed(mon2, "dying", [100.0] * 8)
+    assert mon2.rebalance_hint()["dying"] == pytest.approx(0.25)

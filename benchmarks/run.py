@@ -49,6 +49,7 @@ MODULES = [
     "benchmarks.lm_serve_paged",
     "benchmarks.lm_roofline",
     "benchmarks.sim_throughput",
+    "benchmarks.train_oversub",
 ]
 
 

@@ -67,7 +67,21 @@ class CheckpointManager:
         self._inflight: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, state) -> None:
+    def save(self, step: int, state, *, um=None, drain=()) -> None:
+        """Snapshot ``state`` (async unless configured otherwise).
+
+        For UM-backed state pass the runtime as ``um`` and the durable
+        buffers/views as ``drain``: the save then behaves as a memory
+        pressure event at the step boundary — ``um.sync()`` first (policy-
+        deferred migrations land before the snapshot is consistent), then
+        the dirty device-resident runs of ``drain`` charge their d2h
+        writeback via :meth:`~repro.core.umem.UnifiedMemory.drain_dirty`.
+        The drain moves no pages and clears no dirty bits, so a save mid-
+        oversubscription neither leaks residency nor perturbs any later
+        step's charges."""
+        if um is not None:
+            um.sync()
+            um.drain_dirty(drain)
         host = jax.tree.map(lambda a: np.asarray(a), state,
                             is_leaf=lambda x: hasattr(x, "shape"))
         self.wait()

@@ -987,6 +987,37 @@ class UnifiedMemory:
         pt[phase] = acc
         return dts
 
+    def drain_dirty(self, ranges: Sequence) -> int:
+        """Checkpoint-style writeback: charge a d2h drain of every *dirty*
+        device-resident byte covered by ``ranges`` (BufferViews, UMBuffers
+        or raw Ranges) WITHOUT moving pages or clearing dirty state — the
+        snapshot reads the live copy, so placement and every subsequent
+        charge are exactly what they would have been without the save
+        (CheckpointManager.save of UM-backed state goes through this).
+        Table-less explicit blobs are skipped: their authoritative copy is
+        the host staging side. Returns the bytes charged."""
+        total = 0
+        for r in ranges:
+            a, lo, hi = _as_range(r, Actor.GPU)
+            assert not a.freed, a.name
+            t = a.table
+            if t is None or hi <= lo:
+                continue
+            p0, p1 = t.page_range(lo, hi)
+            rs, re_, rv = t.tier_runs(p0, p1)
+            # device side: odd (node, tier) location encodings; plain
+            # tables reduce to Tier.DEVICE == 1
+            m = (rv > 0) & (rv % 2 == 1)
+            if not m.any():
+                continue
+            nb = t.dirty_bytes(rs[m], re_[m])
+            if nb:
+                self._charge(nb / self.hw.link_d2h)
+                self.prof.traffic().link_d2h += nb
+                total += nb
+        self._sample()
+        return total
+
     # ------------------------------------------------------------- sync/misc
     def sync(self) -> float:
         """cudaDeviceSynchronize analogue: each live paged allocation's

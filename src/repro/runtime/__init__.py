@@ -6,4 +6,4 @@ from repro.runtime.fault import (  # noqa: F401
     poisson_steps,
 )
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
-from repro.runtime.elastic import reshard_tree  # noqa: F401
+from repro.runtime.elastic import reshard_tree, resize_um_capacity  # noqa: F401

@@ -15,3 +15,17 @@ def reshard_tree(tree, shardings):
     """tree of jax/np arrays -> device arrays placed per `shardings` tree."""
     host = jax.tree.map(lambda a: np.asarray(a), tree)
     return jax.tree.map(lambda a, s: jax.device_put(a, s), host, shardings)
+
+
+def resize_um_capacity(um, nbytes: int):
+    """Elastic resize as a UnifiedMemory pressure event: swap in a hardware
+    model with the new device capacity (``with_device_capacity`` keeps a
+    multi-node model's per-node split consistent — never
+    dataclasses.replace here). Shrinking moves no pages eagerly: the next
+    first-touch / migration simply sees the reduced headroom and the
+    allocation's policy evicts or spills exactly as it would under any
+    other pressure, so the application's math (and a training run's
+    losses) are untouched. Returns the new hardware model."""
+    um.hw = um.hw.with_device_capacity(int(nbytes))
+    um._sample()
+    return um.hw

@@ -1,1 +1,12 @@
 from repro.train.trainer import Trainer, TrainerConfig, make_train_step, make_train_state  # noqa: F401
+from repro.train.offload import (  # noqa: F401
+    TRAIN_MODELS,
+    TrainHints,
+    TrainMemPlan,
+    TrainModelSpec,
+    capacity_for,
+    device_demand_bytes,
+    get_train_model,
+    state_bytes,
+)
+from repro.train.umtrain import UMTrainer  # noqa: F401

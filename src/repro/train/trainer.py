@@ -122,7 +122,14 @@ class Trainer:
                  ckpt: Optional[CheckpointManager] = None,
                  injector: Optional[FailureInjector] = None,
                  monitor: Optional[StragglerMonitor] = None,
-                 ckpt_every: int = 50):
+                 ckpt_every: int = 50,
+                 clock: Optional[Callable[[], float]] = None):
+        """``clock`` is the time source for per-step durations (history
+        ``dt`` and the straggler monitor). Default is wall clock; a run
+        whose memory system goes through UnifiedMemory should pass the
+        modeled clock — ``clock=lambda: um.clock`` — so training metrics
+        are directly comparable to the serve stack's ``ServeEngine.now()``
+        timings instead of mixing modeled and wall seconds."""
         self.cfg = cfg
         self.state = state
         self.step_fn = step_fn
@@ -131,6 +138,7 @@ class Trainer:
         self.injector = injector
         self.monitor = monitor or StragglerMonitor()
         self.ckpt_every = ckpt_every
+        self.clock = clock or time.perf_counter
         self.history: list = []
         self.restarts = 0
 
@@ -139,12 +147,12 @@ class Trainer:
         while done < num_steps:
             try:
                 step_idx, batch = next(self.loader)
-                t0 = time.perf_counter()
+                t0 = self.clock()
                 if self.injector is not None:
                     self.injector.maybe_fail(step_idx)
                 self.state, metrics = self.step_fn(self.state, batch)
                 loss = float(metrics["loss"])
-                dt = time.perf_counter() - t0
+                dt = self.clock() - t0
                 self.monitor.record("worker0", dt)
                 self.history.append({"step": step_idx, "loss": loss, "dt": dt})
                 done += 1

@@ -18,6 +18,9 @@ Contracts:
   through a FULL serve-engine run (admission, chunked prefill,
   paged-attention decode, release, pool close), not just a bare touch;
   a table-less backend must be refused by the pool up front.
+* **train-path state symmetry** — the UM-backed training state tree keeps
+  alloc/free symmetry through a full UMTrainer run (init, phased steps
+  with placement hints, close); see check_train_state_symmetry.
 """
 from __future__ import annotations
 
@@ -148,11 +151,35 @@ def check_serve_pool_symmetry(policy, seed: int = 0) -> None:
         "run + close()"
 
 
+def check_train_state_symmetry(policy, seed: int = 0) -> None:
+    """Training-path clause: the UM-backed training state tree (params,
+    grads, AdamW moments, master weights, activation stash, io/scratch)
+    keeps alloc/free symmetry through a FULL training run — init first
+    touch, two optimizer steps' worth of phased launches with placement
+    hints, close(). Every registered backend must come back to the
+    pre-trainer residency baseline; the staged (table-less) port exercises
+    its slab + host-blob split on the same path."""
+    from repro.train import UMTrainer, get_train_model
+
+    um = UnifiedMemory()
+    base = (um.host_bytes(), um.device_bytes())
+    tr = UMTrainer(get_train_model("train_tiny"), policy=policy,
+                   um=um, seed=seed)
+    out = tr.run(2)
+    assert len(out["losses"]) == 2 and out["modeled_s"] > 0.0
+    tr.close()
+    assert (um.host_bytes(), um.device_bytes()) == base, \
+        f"{policy.kind}: training state residency leaked across close()"
+    assert um._recompute_residency() == base, \
+        f"{policy.kind}: cached residency drifted across the training run"
+
+
 CONTRACTS = (
     check_alloc_free_symmetry,
     check_residency_cache_matches_recount,
     check_no_charge_on_freed,
     check_serve_pool_symmetry,
+    check_train_state_symmetry,
 )
 
 

@@ -1,0 +1,261 @@
+"""UM-backed oversubscribed training: offload plan, trainer, pressure events.
+
+The spine of these tests is the subsystem's one invariant: the *math* is
+real numpy with a fixed op order and the *memory system* is modeled, so
+losses are bit-identical across every policy, oversubscription ratio,
+checkpoint cadence and elastic resize — only the modeled clock and the
+traffic counters may differ.
+"""
+import itertools
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import UnifiedMemory, make_policy
+from repro.train import (Trainer, UMTrainer, capacity_for,
+                         device_demand_bytes, get_train_model, state_bytes)
+
+KB = 1024
+TINY = get_train_model("train_tiny")
+
+BACKENDS = [("system", None), ("managed", None), ("explicit", None),
+            ("mi300a_unified", "mi300a"), ("cluster_system", "gh200_x2"),
+            ("cluster_striped", "gh200_x2")]
+
+
+def _total(um, field):
+    return um.prof.report()["traffic_total"][field]
+
+
+def _run(policy, hw=None, ratio=1.0, steps=3, **kw):
+    tr = UMTrainer(TINY, policy=policy, hw=hw, ratio=ratio,
+                   page_size=4 * KB, **kw)
+    out = tr.run(steps)
+    return tr, out
+
+
+# ------------------------------------------------------------ satellite: clock
+def test_trainer_accepts_injected_clock():
+    """Trainer.run times steps with the injected clock (the UM runtime's
+    modeled clock), not wall time."""
+    ticks = itertools.count()
+    clock = lambda: 5.0 * next(ticks)  # noqa: E731
+    loader = iter([(i, {"labels": np.zeros((1, 1))}) for i in range(3)])
+    step_fn = lambda state, batch: (state, {"loss": 1.5})  # noqa: E731
+    tr = Trainer(None, {}, step_fn, loader, clock=clock)
+    out = tr.run(3)
+    assert [h["dt"] for h in out["history"]] == [5.0, 5.0, 5.0]
+    assert all(h["loss"] == 1.5 for h in out["history"])
+
+
+def test_trainer_default_clock_is_wall():
+    import time
+    tr = Trainer(None, {}, None, None)
+    assert tr.clock is time.perf_counter
+
+
+def test_umtrainer_clock_is_modeled():
+    tr, out = _run("system")
+    assert tr.now() == tr.um.clock
+    assert out["modeled_s"] == pytest.approx(
+        sum(h["dt"] for h in out["history"]))
+    # the modeled clock is monotone across steps and far from wall time
+    assert 0.0 < out["modeled_s"] < 1.0
+    tr.close()
+
+
+# ------------------------------------------------- satellite: loss bit-identity
+@pytest.fixture(scope="module")
+def ref_losses():
+    tr, out = _run("system", ratio=1.0)
+    tr.close()
+    return out["losses"]
+
+
+@pytest.mark.parametrize("policy,hw", [("system", None), ("managed", None),
+                                       ("mi300a_unified", "mi300a")])
+@pytest.mark.parametrize("ratio", [1.25, 1.5])
+def test_loss_bit_identity_under_oversubscription(policy, hw, ratio,
+                                                  ref_losses):
+    tr, out = _run(policy, hw=hw, ratio=ratio)
+    tr.close()
+    assert out["losses"] == ref_losses, \
+        f"{policy} x{ratio}: oversubscription changed the math"
+
+
+def test_all_backends_bit_identical_and_symmetric(ref_losses):
+    for policy, hw in BACKENDS:
+        tr, out = _run(policy, hw=hw, ratio=1.5)
+        assert out["losses"] == ref_losses, f"{policy}: losses diverged"
+        tr.close()
+        assert (tr.um.host_bytes(), tr.um.device_bytes()) == (0, 0), \
+            f"{policy}: training state leaked across close()"
+
+
+def test_oversubscription_costs_time_not_loss():
+    """Under the fault-driven backend a smaller device means migration +
+    eviction traffic: the modeled step time must grow with the ratio while
+    the losses stay bit-identical (the fig11-style tradeoff)."""
+    tr1, out1 = _run("managed", ratio=1.0)
+    tr2, out2 = _run("managed", ratio=1.5)
+    assert out2["losses"] == out1["losses"]
+    assert out2["modeled_s"] > out1["modeled_s"]
+    assert _total(tr2.um, "migrated_out") > _total(tr1.um, "migrated_out")
+    tr1.close()
+    tr2.close()
+
+
+# ----------------------------------------------------- capacity-axis semantics
+def test_capacity_floors():
+    demand = device_demand_bytes(TINY)
+    sysp = make_policy("system", page_size=4 * KB)
+    assert capacity_for(TINY, sysp, 1.0) >= demand
+    assert capacity_for(TINY, sysp, 2.0) < demand  # migratable: shrinks
+    # the non-migratable single pool cannot hold less than the whole tree
+    mi = make_policy("mi300a_unified", page_size=4 * KB)
+    assert capacity_for(TINY, mi, 4.0) == state_bytes(TINY)
+    # the staged port keeps at least its slab set on device
+    ex = make_policy("explicit", page_size=4 * KB)
+    assert capacity_for(TINY, ex, 100.0) > 0
+
+
+def test_eff_ratio_reports_modeled_capacity():
+    tr, out = _run("system", ratio=1.5)
+    tr.close()
+    assert out["eff_ratio"] == pytest.approx(1.5, rel=0.05)
+    # mi300a floors at the full state tree: eff_ratio honestly reports < 1
+    tr, out = _run("mi300a_unified", hw="mi300a", ratio=1.5)
+    tr.close()
+    assert out["eff_ratio"] < 1.0
+    assert out["capacity"] == state_bytes(TINY)
+
+
+# ------------------------------------------------- satellite: checkpoint drain
+def test_checkpoint_save_is_pure_pressure_event():
+    """A mid-oversubscription save charges a d2h drain on the modeled
+    clock but neither leaks pages nor perturbs any subsequent step's
+    charges: the twin run with checkpointing shows bit-identical losses
+    AND bit-identical per-step dts."""
+    with tempfile.TemporaryDirectory() as tmp:
+        tr_a, out_a = _run("managed", ratio=1.5, steps=4)
+        cm = CheckpointManager(tmp, async_save=False)
+        tr_b = UMTrainer(TINY, policy="managed", ratio=1.5, page_size=4 * KB)
+        out_b = tr_b.run(4, ckpt=cm, ckpt_every=2)
+        assert out_b["losses"] == out_a["losses"]
+        dts_a = [h["dt"] for h in out_a["history"]]
+        dts_b = [h["dt"] for h in out_b["history"]]
+        # bit-identical before the first save; after it the drain has
+        # offset the absolute clock, so dt = clock - t0 may differ in the
+        # last ulp of the subtraction — but by nothing more
+        assert dts_b[:2] == dts_a[:2]
+        np.testing.assert_allclose(dts_b, dts_a, rtol=1e-12, atol=0.0,
+                                   err_msg="drain perturbed later charges")
+        # the drain itself is charged: the checkpointing run's clock is
+        # strictly behind, and it moved real d2h bytes
+        assert tr_b.um.clock > tr_a.um.clock
+        assert _total(tr_b.um, "link_d2h") > _total(tr_a.um, "link_d2h")
+        assert [e["kind"] for e in out_b["events"]] \
+            == ["checkpoint", "checkpoint"]
+        tr_a.close()
+        tr_b.close()
+        assert (tr_b.um.host_bytes(), tr_b.um.device_bytes()) == (0, 0)
+
+
+def test_checkpoint_restore_roundtrip():
+    """restore + continue reproduces the uninterrupted run bit-for-bit
+    (deterministic batches are keyed on the restored step count)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        tr_full, out_full = _run("system", ratio=1.5, steps=4)
+        tr_full.close()
+
+        cm = CheckpointManager(tmp, async_save=False)
+        tr_head = UMTrainer(TINY, policy="system", ratio=1.5,
+                            page_size=4 * KB)
+        tr_head.run(2)
+        tr_head.save_checkpoint(cm)
+        tr_head.close()
+
+        tr_tail = UMTrainer(TINY, policy="system", ratio=1.5,
+                            page_size=4 * KB)
+        got = tr_tail.restore_checkpoint(cm)
+        assert got == 2
+        out_tail = tr_tail.run(2)
+        assert out_tail["losses"] == out_full["losses"][2:]
+        tr_tail.close()
+
+
+def test_drain_dirty_moves_no_pages():
+    """umem.drain_dirty charges the d2h writeback of dirty device runs but
+    mutates nothing: residency, page tiers and dirty bits are untouched."""
+    from repro.core import Actor
+    um = UnifiedMemory()
+    a = um.alloc("d", 64 * KB, make_policy("system", page_size=4 * KB))
+    um.kernel(writes=[(a, 0, 64 * KB)], actor=Actor.GPU, name="w")
+    um.sync()
+    res = (um.host_bytes(), um.device_bytes())
+    tiers = a.table._tier.runs()
+    dirty = a.table._dirty.runs()
+    clock = um.clock
+    moved = um.drain_dirty([(a, 0, 64 * KB)])
+    assert moved > 0
+    assert um.clock > clock
+    assert (um.host_bytes(), um.device_bytes()) == res
+    assert all(np.array_equal(x, y)
+               for x, y in zip(a.table._tier.runs(), tiers))
+    assert all(np.array_equal(x, y)
+               for x, y in zip(a.table._dirty.runs(), dirty))
+    # second drain charges the same bytes again: nothing was cleared
+    assert um.drain_dirty([(a, 0, 64 * KB)]) == moved
+    um.free(a)
+
+
+# --------------------------------------------------- satellite: elastic resize
+def test_elastic_resize_is_pressure_not_math():
+    """Shrinking the device mid-run through runtime.elastic forces real
+    eviction traffic under the fault-driven backend without touching the
+    losses."""
+    tr_a, out_a = _run("managed", ratio=1.0, steps=6)
+    shrunk = capacity_for(TINY, make_policy("managed", page_size=4 * KB), 2.0)
+    tr_b = UMTrainer(TINY, policy="managed", ratio=1.0, page_size=4 * KB)
+    out_b = tr_b.run(6, resize_at={3: shrunk})
+    assert out_b["losses"] == out_a["losses"], "elastic resize changed math"
+    assert [e["kind"] for e in out_b["events"]] == ["resize"]
+    assert tr_b.um.hw.device_capacity == shrunk
+    assert _total(tr_b.um, "migrated_out") > _total(tr_a.um, "migrated_out"), \
+        "shrink produced no eviction traffic"
+    assert out_b["modeled_s"] > out_a["modeled_s"]
+    tr_a.close()
+    tr_b.close()
+    assert (tr_b.um.host_bytes(), tr_b.um.device_bytes()) == (0, 0)
+
+
+def test_elastic_resize_grow_restores_speed():
+    """Grow back after a shrink: later steps stop paying eviction traffic
+    (dt falls back toward the unshrunk profile) and losses never move."""
+    tr_a, out_a = _run("system", ratio=1.0, steps=6)
+    pol = make_policy("system", page_size=4 * KB)
+    small = capacity_for(TINY, pol, 2.0)
+    big = capacity_for(TINY, pol, 1.0)
+    tr_b = UMTrainer(TINY, policy="system", ratio=1.0, page_size=4 * KB)
+    out_b = tr_b.run(6, resize_at={2: small, 4: big})
+    assert out_b["losses"] == out_a["losses"]
+    assert [(e["kind"], e["capacity"]) for e in out_b["events"]] \
+        == [("resize", small), ("resize", big)]
+    tr_a.close()
+    tr_b.close()
+
+
+# ------------------------------------------------------------- node-aware path
+def test_cluster_training_spreads_layers():
+    """Node-aware backends round-robin the layers: both superchips see
+    device-side residency during the run."""
+    from repro.cluster import device_used_on
+    tr = UMTrainer(TINY, policy="cluster_system", hw="gh200_x2", ratio=1.0,
+                   page_size=4 * KB)
+    tr.run(2)
+    used = [device_used_on(tr.um, k) for k in range(tr.um.hw.nodes)]
+    assert all(u > 0 for u in used), \
+        f"layer round-robin left a node idle: {used}"
+    tr.close()
